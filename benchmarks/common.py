@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV emission, cost models.
+
+Runtime-overhead figures (paper Figs. 4/8/13) report
+``(native_compute + modeled_mechanism_seconds) / native_compute``:
+compute time is measured wall-clock on this host, mechanism cost is
+charged through the NVM emulator's bandwidth model (NVM = DRAM/8,
+Quartz-style — paper §III.A). Recomputation/correctness figures
+(Figs. 3/7/10/12) run the real crash emulator end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    value: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.value:.6g},{self.derived}"
+
+
+def emit(rows: List[Row], save_as: Optional[str] = None) -> None:
+    for r in rows:
+        print(r.csv(), flush=True)
+    if save_as:
+        os.makedirs(ART, exist_ok=True)
+        with open(os.path.join(ART, save_as), "w") as fh:
+            json.dump([dataclasses.asdict(r) for r in rows], fh, indent=1)
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Best-of wall time."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,103 @@
+"""Paper Fig. 13: XSBench runtime with the seven mechanisms.
+
+The persisted objects are tiny (macro_xs_vector + 5 counters + index =
+~13 cache lines), flushed/checkpointed every 0.01% of lookups. The
+NVM/DRAM checkpoint still pays a whole-DRAM-cache flush per checkpoint —
+the paper's 13% outlier; ADCC flushes ~13 lines: <=0.05% overhead.
+Runtime measured as wall-clock lookup loop (numpy, no emulator) with
+mechanism costs charged per flush interval.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.nvm import NVMConfig
+
+from .common import Row, emit
+
+LOOKUPS = 200_000
+# paper-matched ABSOLUTE interval: 0.01% of the paper's 1.5e7 lookups
+# (tying it to our scaled-down total would shrink intervals 75x and
+# exaggerate every mechanism's overhead equally)
+FLUSH_EVERY = 1_500
+GRID = 40_000
+NUCLIDES = 34
+STATE_BYTES = (5 + 5 + 1) * 8          # macro_xs + counters + index
+
+
+def _native_lookup_seconds() -> float:
+    """Vectorized XSBench-like lookup kernel (compute only)."""
+    rng = np.random.default_rng(0)
+    egrid = np.sort(rng.uniform(0, 20, GRID))
+    nuc = rng.uniform(0.1, 10, (GRID, NUCLIDES, 5))
+    t0 = time.perf_counter()
+    B = 2000
+    for i in range(0, LOOKUPS, B):
+        e = rng.uniform(0, 20, B)
+        idx = np.clip(np.searchsorted(egrid, e) - 1, 0, GRID - 2)
+        sel = rng.integers(0, NUCLIDES, (B, 6))
+        x0 = nuc[idx[:, None], sel]
+        x1 = nuc[idx[:, None] + 1, sel]
+        t = ((e - egrid[idx]) / np.maximum(egrid[idx + 1] - egrid[idx],
+                                           1e-30))[:, None, None]
+        macro = (x0 * (1 - t) + x1 * t).sum(axis=1)
+        cdf = np.cumsum(macro, axis=1)
+        cdf /= cdf[:, -1:]
+        _ = (rng.uniform(0, 1, (B, 1)) < cdf).argmax(axis=1)
+    return time.perf_counter() - t0
+
+
+def _mech_total(case: str, cfg: NVMConfig) -> float:
+    n_flushes = LOOKUPS // FLUSH_EVERY
+    lines = max(1, STATE_BYTES // cfg.line_bytes) + 10  # distinct lines
+    if case == "native":
+        return 0.0
+    if case == "ckpt_hdd":
+        # per checkpoint: seek latency dominates tiny payloads
+        return n_flushes * (5e-3 + STATE_BYTES / cfg.hdd_bw)
+    if case == "ckpt_nvm_only":
+        return n_flushes * (STATE_BYTES / cfg.write_bw
+                            + lines * cfg.flush_latency)
+    if case == "ckpt_nvm_dram":
+        return n_flushes * (STATE_BYTES / cfg.write_bw
+                            + lines * cfg.flush_latency
+                            + cfg.dram_cache_bytes / cfg.dram_bw
+                            + cfg.dram_cache_bytes / cfg.write_bw)
+    if case == "pmem_undo":
+        # tx per interval: log old lines + commit fences
+        return n_flushes * 2 * (lines * 64 / cfg.write_bw
+                                + lines * cfg.flush_latency)
+    if case == "adcc":
+        return n_flushes * (lines * 64 / cfg.write_bw
+                            + lines * cfg.flush_latency)
+    raise ValueError(case)
+
+
+def run() -> List[Row]:
+    native = _native_lookup_seconds()
+    rows = [Row("fig13/mc_runtime/native_seconds", native,
+                f"{LOOKUPS} lookups")]
+    nvm_only = NVMConfig(nvm_same_as_dram=True)
+    nvm_dram = NVMConfig()
+    for case, cfg in [("native", nvm_only), ("ckpt_hdd", nvm_only),
+                      ("ckpt_nvm_only", nvm_only),
+                      ("ckpt_nvm_dram", nvm_dram), ("pmem_undo", nvm_only),
+                      ("adcc_nvm_only", nvm_only),
+                      ("adcc_nvm_dram", nvm_dram)]:
+        base = "adcc" if case.startswith("adcc") else case
+        mech = _mech_total(base, cfg)
+        rows.append(Row(f"fig13/mc_runtime/{case}/normalized",
+                        (native + mech) / native, f"mech={mech*1e3:.2f}ms"))
+    return rows
+
+
+def main() -> None:
+    emit(run(), save_as="fig13_mc_runtime.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,329 @@
+"""Loop-aware static cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation exactly once
+— a ``lax.scan`` over 61 layers reports the flops/bytes of ONE layer
+(verified empirically; see EXPERIMENTS.md §Dry-run methodology). This
+module re-derives whole-step totals by parsing the optimized HLO:
+
+  * computations are parsed into op lines with result shapes;
+  * ``while`` ops are mapped to their body/condition computations and a
+    trip count inferred from the loop-bound constant in the condition;
+  * costs aggregate recursively: while bodies multiply by trip count
+    (nesting multiplies naturally, e.g. the SSD chunk scan inside the
+    layer scan);
+  * FLOPs: dot ops (2 x result elements x contraction size) wherever
+    they appear (including inside fusions);
+  * HBM bytes: operand + result bytes of *boundary* ops only — fusions
+    at their callsite, standalone dots/convs/copies/gathers/DUS — ops
+    inside a fusion stay in registers/VMEM;
+  * collective bytes: result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (per class).
+
+This is a static model of a static schedule — exact for FLOPs, a close
+upper-ish approximation for HBM traffic, exact for collective payloads
+given known trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["parse_hlo", "analyze", "HloCosts"]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*?\)\s+->\s+.*\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_first(type_str: str) -> Tuple[int, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return n, dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # raw remainder of the line (operands + attrs)
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    param_shapes: Dict[str, str]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(name=mo.group(1), type_str=mo.group(2),
+                    opcode=mo.group(3), rest=mo.group(4), line=line)
+            cur.ops.append(op)
+            if op.opcode == "parameter":
+                cur.param_shapes[op.name] = op.type_str
+    return comps
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """2 * result_elems * contraction_size for dot ops."""
+    res_elems, _ = _shape_elems_first(op.type_str)
+    # contraction size: from lhs shape + lhs_contracting_dims
+    operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not operands or mdims is None:
+        return 2.0 * res_elems  # fallback
+    lhs_type = shapes.get(operands[0])
+    if lhs_type is None:
+        return 2.0 * res_elems
+    _, lhs_dims = _shape_elems_first(lhs_type)
+    k = 1
+    for d in mdims.group(1).split(","):
+        if d and int(d) < len(lhs_dims):
+            k *= lhs_dims[int(d)]
+    return 2.0 * res_elems * k
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation. XLA wraps the compare
+    in a kLoop fusion on some backends, so rather than pattern-matching
+    the compare we take the largest positive integer constant in the
+    condition — for scan-lowered loops that is exactly the trip count
+    (increment constants live in the body, not the condition)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode != "constant":
+            continue
+        m = re.search(r"constant\((-?\d+)\)", op.line)
+        if m:
+            val = int(m.group(1))
+            if 0 < val < 10_000_000:
+                best = max(best, val)
+    return best
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # pure dtype-convert / copy fusions: the CPU backend materializes f32
+    # copies of bf16 dot operands (no native bf16 FMA); the TPU MXU
+    # consumes bf16 directly, so these are tracked separately and
+    # excluded from the TPU roofline memory term (reported alongside).
+    layout_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_OPS})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_OPS})
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "HloCosts":
+        return HloCosts(
+            flops=self.flops * k, hbm_bytes=self.hbm_bytes * k,
+            layout_bytes=self.layout_bytes * k,
+            collective_bytes={o: v * k for o, v in
+                              self.collective_bytes.items()},
+            collective_counts={o: v * k for o, v in
+                               self.collective_counts.items()})
+
+    def add(self, other: "HloCosts") -> None:
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.layout_bytes += other.layout_bytes
+        for k in _COLL_OPS:
+            self.collective_bytes[k] += other.collective_bytes[k]
+            self.collective_counts[k] += other.collective_counts[k]
+
+
+_LAYOUT_ONLY = frozenset({"parameter", "copy", "convert", "bitcast",
+                          "reshape", "tuple", "get-tuple-element",
+                          "constant"})
+
+
+# Ops that materialize a buffer in HBM. Each materialized value is
+# charged result_bytes x 2 (one write + one downstream read) — the
+# standard static traffic approximation. reshape/bitcast/tuple/gte alias
+# and cost nothing; dynamic-update-slice updates in place and is charged
+# by its *update* operand, not the full buffer.
+_MEM_OPS = {"dot", "convolution", "copy", "gather", "scatter",
+            "dynamic-slice", "transpose", "reduce", "reduce-window",
+            "broadcast", "iota", "slice", "concatenate", "pad",
+            "sort", "select-and-scatter", "rng", "rng-bit-generator",
+            "cholesky", "triangular-solve", "reverse"}
+
+
+def _op_operand_bytes(op: Op, shapes: Dict[str, str]) -> float:
+    total = 0.0
+    seen = set()
+    for name in re.findall(r"%([\w.\-]+)", op.rest):
+        if name in shapes and name not in seen:
+            seen.add(name)
+            total += _shape_bytes(shapes[name])
+    return total
+
+
+def _first_operand_names(op: Op) -> List[str]:
+    head = op.rest.split(")")[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def analyze(text: str, entry: Optional[str] = None) -> HloCosts:
+    comps = parse_hlo(text)
+    if not comps:
+        return HloCosts()
+    if entry is None:
+        # the entry computation: conventionally the one containing the
+        # final ROOT tuple / named like the module, detect via "ENTRY"
+        entry_match = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = entry_match.group(1) if entry_match else list(comps)[-1]
+
+    memo: Dict[Tuple[str, bool], HloCosts] = {}
+
+    def comp_cost(name: str, inside_fusion: bool) -> HloCosts:
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        out = HloCosts()
+        if comp is None:
+            memo[key] = out
+            return out
+        shapes = {op.name: op.type_str for op in comp.ops}
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _while_trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    inner = comp_cost(body, False).scaled(trips)
+                    out.add(inner)
+                continue
+            if oc in ("fusion", "call", "custom-call", "map"):
+                m = _CALL_ATTR_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    callee = comps[m.group(1)]
+                    inner = comp_cost(m.group(1), True)
+                    # flops from inside; bytes at the fusion boundary.
+                    # Fusions that update carried buffers in place via
+                    # dynamic-update-slice (scan's stacked-output / cache
+                    # writes; possibly several DUSes under a tuple root)
+                    # are charged by their update slices, not the whole
+                    # carried buffer x trip count.
+                    fbytes = 2.0 * _shape_bytes(op.type_str)
+                    cshapes = {o.name: o.type_str for o in callee.ops}
+                    dus_results = 0.0
+                    dus_updates = 0.0
+                    for cop in callee.ops:
+                        if cop.opcode != "dynamic-update-slice":
+                            continue
+                        dus_results += _shape_bytes(cop.type_str)
+                        names = _first_operand_names(cop)
+                        if len(names) > 1 and names[1] in cshapes:
+                            dus_updates += _shape_bytes(cshapes[names[1]])
+                    if dus_results:
+                        total = _shape_bytes(op.type_str)
+                        adj = max(0.0, total - min(dus_results, total))
+                        fbytes = 2.0 * (adj + dus_updates)
+                    # pure convert/copy fusions: CPU-lowering artifact of
+                    # mixed-precision dots — classified as layout bytes
+                    callee_ops = {o.opcode for o in callee.ops}
+                    is_layout = callee_ops <= _LAYOUT_ONLY
+                    boundary = HloCosts(
+                        flops=inner.flops,
+                        hbm_bytes=0.0 if is_layout else fbytes,
+                        layout_bytes=(fbytes if is_layout
+                                      else inner.layout_bytes),
+                        collective_bytes=inner.collective_bytes,
+                        collective_counts=inner.collective_counts)
+                    out.add(boundary)
+                continue
+            if oc in ("conditional",):
+                for sub in _CALL_ATTR_RE.findall(op.line):
+                    if sub in comps:
+                        out.add(comp_cost(sub, False))
+                continue
+            base = oc.replace("-start", "")
+            if base in _COLL_OPS:
+                if oc.endswith("-done"):
+                    continue
+                nbytes = _shape_bytes(op.type_str)
+                out.collective_bytes[base] += nbytes
+                out.collective_counts[base] += 1
+                out.hbm_bytes += 2.0 * nbytes
+                continue
+            if oc == "dot":
+                out.flops += _dot_flops(op, shapes)
+            if inside_fusion:
+                continue  # fused ops live in registers/VMEM
+            if oc == "dynamic-update-slice":
+                # in-place: charge only the update slice (read + write)
+                names = _first_operand_names(op)
+                upd = names[1] if len(names) > 1 else None
+                if upd and upd in shapes:
+                    out.hbm_bytes += 2.0 * _shape_bytes(shapes[upd])
+                continue
+            if oc in ("copy", "convert"):
+                out.layout_bytes += 2.0 * _shape_bytes(op.type_str)
+                continue
+            if oc in _MEM_OPS:
+                out.hbm_bytes += 2.0 * _shape_bytes(op.type_str)
+        memo[key] = out
+        return out
+
+    return comp_cost(entry, False)

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure + framework
+tables. Prints ``name,value,derived`` CSV. ``python -m benchmarks.run``.
+
+  fig3   CG recomputation vs problem size          (paper Fig. 3)
+  fig4   CG runtime, 7 mechanisms                  (paper Fig. 4)
+  fig7   ABFT-MM recomputation, both loops         (paper Fig. 7)
+  fig8   ABFT-MM runtime vs rank, 7 mechanisms     (paper Fig. 8)
+  fig10  MC correctness basic vs selective restart (paper Figs. 10+12)
+  fig13  MC runtime, 7 mechanisms                  (paper Fig. 13)
+  train  training-loop ADCC vs sync checkpoint     (beyond-paper)
+  kernel ABFT matmul fused-checksum overhead       (kernel-level)
+
+Roofline (reads dry-run artifacts): ``python -m benchmarks.roofline``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
+               fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
+               kernel_bench, train_overhead)
+
+SUITES = {
+    "fig3": fig3_cg_recompute,
+    "fig4": fig4_cg_runtime,
+    "fig7": fig7_mm_recompute,
+    "fig8": fig8_mm_runtime,
+    "fig10_12": fig10_12_mc_correctness,
+    "fig13": fig13_mc_runtime,
+    "train": train_overhead,
+    "kernel": kernel_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SUITES)
+    print("name,value,derived")
+    t0 = time.time()
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        SUITES[name].main()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

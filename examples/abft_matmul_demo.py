@@ -1,0 +1,69 @@
+"""Paper §III.C end to end: ABFT matrix multiplication with ADCC.
+
+1. Runs the two-loop checksum-extended MM (Fig. 6) under the crash
+   emulator, crashes mid-loop-1 and mid-loop-2, and recovers via
+   checksum verification (+ recomputation of torn chunks).
+2. Shows single-element error *correction* from checksums alone.
+3. Runs the fused-epilogue Pallas kernel (TPU target, interpret mode on
+   CPU) and verifies its checksums against the jnp oracle.
+
+    PYTHONPATH=src python examples/abft_matmul_demo.py
+"""
+
+import numpy as np
+
+from repro.algorithms.mm_abft import ABFTMatmul
+from repro.core import abft
+from repro.core.nvm import NVMConfig
+
+
+def crash_demo() -> None:
+    rng = np.random.default_rng(0)
+    n, k = 512, 128
+    A = rng.uniform(-1, 1, (n, n))
+    B = rng.uniform(-1, 1, (n, n))
+    for loop, it in [("loop1", 2), ("loop2", 2)]:
+        mm = ABFTMatmul(A, B, k, NVMConfig(cache_bytes=2 * 1024 * 1024))
+        res = mm.run(crash_after=(loop, it))
+        print(f"== crash in {loop}: {res.chunks_lost} chunk(s) torn, "
+              f"{res.corrected_elements} element(s) checksum-corrected, "
+              f"final |C - A@B|_max = {res.max_error:.2e}")
+
+
+def correction_demo() -> None:
+    rng = np.random.default_rng(1)
+    C = rng.uniform(-1, 1, (64, 64))
+    Cf = abft.encode_full(C)
+    Cf[17, 42] += 3.14159          # single corrupted element
+    fixed, nfix = abft.correct_single_error(Cf)
+    print(f"== single-error correction: fixed {nfix} element, "
+          f"recovered exactly: {np.allclose(fixed, abft.encode_full(C))}")
+
+
+def kernel_demo() -> None:
+    import jax.numpy as jnp
+    from repro.kernels.abft_matmul.ops import abft_matmul_full
+    from repro.kernels.checksum_verify.ops import verify_checksums
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(192, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 160)), jnp.float32)
+    cf = abft_matmul_full(a, b)           # Pallas fused epilogue
+    ok, _, _ = verify_checksums(cf)       # Pallas detection kernel
+    print(f"== Pallas fused-checksum matmul: C_f {cf.shape}, "
+          f"checksums verify: {bool(ok)}")
+    bad = cf.at[5, 7].add(10.0)
+    ok2, rres, cres = verify_checksums(bad)
+    import jax.numpy as jnp2
+    print(f"== tampered element detected at row "
+          f"{int(jnp2.argmax(jnp2.abs(rres)))}, col "
+          f"{int(jnp2.argmax(jnp2.abs(cres)))} (truth: 5, 7)")
+
+
+def main() -> None:
+    crash_demo()
+    correction_demo()
+    kernel_demo()
+
+
+if __name__ == "__main__":
+    main()

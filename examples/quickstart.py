@@ -1,0 +1,53 @@
+"""Quickstart: train a small LM with algorithm-directed crash consistence.
+
+Runs a reduced llama3 config for 40 steps with the ADCC trainer, then
+simulates a mid-run crash and shows bitwise-identical recovery.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.launch.train import ADCCTrainer
+from repro.models.registry import get_config
+
+
+def main() -> None:
+    cfg = get_config("llama3-8b").reduced()
+    tcfg = TrainConfig(remat="none", total_steps=40, warmup_steps=4)
+    workdir = tempfile.mkdtemp(prefix="quickstart_")
+    print(f"== training {cfg.name} (reduced: {cfg.param_count()/1e6:.1f}M "
+          f"params) with ADCC, workdir={workdir}")
+
+    trainer = ADCCTrainer(cfg, tcfg, workdir, batch=8, seq=64, slot_every=8)
+    res = trainer.run(steps=40, crash_at_step=25)
+    print(f"\n!! simulated crash at step {res.final_step} "
+          f"(async slot writes torn, process state lost)\n")
+
+    resumed = ADCCTrainer(cfg, tcfg, workdir, batch=8, seq=64, slot_every=8)
+    res2 = resumed.run(steps=40)
+    print(f"\n== recovery: {res2.recovery_report}")
+    print(f"== resumed from step {res2.resumed_from}, "
+          f"final loss {res2.losses[-1]:.4f}")
+
+    # prove bitwise equivalence against an uninterrupted run
+    ref_dir = tempfile.mkdtemp(prefix="quickstart_ref_")
+    ref = ADCCTrainer(cfg, tcfg, ref_dir, batch=8, seq=64, slot_every=8)
+    ref_res = ref.run(steps=40, log_every=0)
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        ref._final_params, resumed._final_params)))
+    print(f"== max |param diff| vs uninterrupted run: {diff} "
+          f"({'BITWISE IDENTICAL' if diff == 0 else 'MISMATCH'})")
+    shutil.rmtree(workdir, ignore_errors=True)
+    shutil.rmtree(ref_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

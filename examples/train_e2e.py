@@ -1,0 +1,56 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a few
+hundred steps with the full production stack — sharded train step, ADCC
+ledger + async slots, straggler monitor, synthetic pipeline — and report
+the loss curve + fault-tolerance overhead.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+
+The ~100M config is mamba2-130m at full width but trimmed depth for CPU
+wall-time; pass --full for the real 24-layer config.
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.launch.train import ADCCTrainer
+from repro.models.registry import get_config
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2-130m")
+    if not args.full:
+        cfg = dataclasses.replace(cfg, n_layers=6)   # ~90M params, CPU-sized
+    print(f"== {cfg.name}: {cfg.param_count()/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    tcfg = TrainConfig(remat="none", total_steps=args.steps,
+                       warmup_steps=max(10, args.steps // 20),
+                       learning_rate=1e-3)
+    wd = tempfile.mkdtemp(prefix="train_e2e_")
+    tr = ADCCTrainer(cfg, tcfg, wd, batch=args.batch, seq=args.seq,
+                     slot_every=25)
+    res = tr.run(args.steps, log_every=20)
+
+    first = float(np.mean(res.losses[:10]))
+    last = float(np.mean(res.losses[-10:]))
+    med = float(np.median(res.step_seconds[2:]))
+    print(f"\n== loss {first:.4f} -> {last:.4f} "
+          f"({'LEARNING' if last < first - 0.05 else 'check config'})")
+    print(f"== median step {med*1e3:.0f} ms; straggler flags: "
+          f"{tr.monitor.flagged_steps}")
+    print(f"== ledger + slots in {wd} (delete when done)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Mesh-agnostic checkpointing with elastic restore.
+
+Checkpoints store *global* (unsharded) arrays plus the logical-axes
+metadata, never device layouts — so a run saved on an N-device mesh
+restores onto an M-device mesh (elastic scaling after losing/gaining
+pods): ``restore`` re-applies the partition rules of the *target* mesh
+and ``jax.device_put``s each global array against its new
+NamedSharding. Complements the ADCC slot store (core/slots.py), which
+is the fast intra-job recovery tier; this is the durable cross-job tier.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.slots import flatten_state, unflatten_state
+from ..sharding.partition import PartitionRules, params_shardings
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_elastic"]
+
+
+def save_checkpoint(path: str, state, step: int,
+                    extra_meta: Optional[Dict] = None) -> None:
+    """state: any pytree of arrays (will be fetched to host as global
+    numpy arrays)."""
+    os.makedirs(path, exist_ok=True)
+    flat = flatten_state(jax.tree.map(np.asarray, state))
+    np.savez(os.path.join(path, "state.npz"),
+             **{k.replace("/", "__"): v for k, v in flat.items()})
+    meta = {"step": step, "n_leaves": len(flat)}
+    meta.update(extra_meta or {})
+    with open(os.path.join(path, "meta.json"), "w") as fh:
+        json.dump(meta, fh)
+
+
+def restore_checkpoint(path: str, template) -> Tuple[Any, Dict]:
+    """Rebuild the pytree on host (numpy). Template supplies structure."""
+    with np.load(os.path.join(path, "state.npz")) as z:
+        flat = {k.replace("__", "/"): z[k] for k in z.files}
+    with open(os.path.join(path, "meta.json")) as fh:
+        meta = json.load(fh)
+    return unflatten_state(template, flat), meta
+
+
+def restore_elastic(path: str, template, rules: PartitionRules,
+                    axes_tree) -> Tuple[Any, Dict]:
+    """Restore onto a *different* mesh: device_put every global array
+    against the sharding derived from the target mesh's rules."""
+    host_state, meta = restore_checkpoint(path, template)
+    shardings = params_shardings(rules, axes_tree)
+    placed = jax.tree.map(jax.device_put, host_state, shardings)
+    return placed, meta

@@ -1,0 +1,5 @@
+"""Per-architecture configs (one module per assigned arch) + base types."""
+
+from .base import SHAPES, MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+
+__all__ = ["SHAPES", "MeshConfig", "ModelConfig", "ShapeConfig", "TrainConfig"]

@@ -1,0 +1,38 @@
+"""repro.core — the paper's primary contribution: algorithm-directed
+crash consistence (ADCC) for NVM, adapted to a JAX/TPU training stack.
+
+Substrate (paper SIII.A):
+  nvm, regions            emulated NVM + volatile LRU cache + crash semantics
+Baselines (paper test cases 2-5):
+  checkpoint_baseline     synchronous full-copy checkpoint (hdd/nvm/nvm+dram)
+  transactions            PMEM-style undo-log transactions
+Algorithm knowledge (paper SIII.B-D):
+  abft                    checksum algebra (Eqs. 3-6)
+  invariants              invariant registry (orthogonality/residual/checksum)
+  recovery                backward-scan restart-point search
+  versioned               iteration-versioned persistent arrays
+ADCC-for-training (TPU adaptation, DESIGN.md S2-3):
+  acc_state, slots        incremental checksums + multi-slot verified recovery
+"""
+
+from .nvm import CrashEmulator, NVMConfig, NVMStore, TrafficStats, VolatileCache
+from .regions import PersistentRegion
+from .invariants import (
+    ChecksumInvariant,
+    InvariantSet,
+    OrthogonalityInvariant,
+    ResidualInvariant,
+    ScalarChecksumInvariant,
+)
+from .recovery import RecoveryOutcome, backward_scan
+from .transactions import TxManager, UndoLogTx
+from .checkpoint_baseline import CheckpointBaseline
+
+__all__ = [
+    "CrashEmulator", "NVMConfig", "NVMStore", "TrafficStats", "VolatileCache",
+    "PersistentRegion",
+    "ChecksumInvariant", "InvariantSet", "OrthogonalityInvariant",
+    "ResidualInvariant", "ScalarChecksumInvariant",
+    "RecoveryOutcome", "backward_scan",
+    "TxManager", "UndoLogTx", "CheckpointBaseline",
+]

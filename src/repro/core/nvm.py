@@ -1,0 +1,361 @@
+"""Emulated NVM + volatile cache + crash semantics (paper §III.A).
+
+The paper studies crash consistence with a PIN-based emulator: program
+loads/stores go through a configurable LRU cache sitting in front of
+NVM-based main memory; on a crash, cache contents are lost and only the
+NVM image survives. This module reproduces that machinery in pure
+numpy at cache-line granularity, plus a bandwidth/latency *cost model*
+(Quartz-style: NVM bandwidth = DRAM/8 by default) so mechanism overheads
+can be charged in modeled seconds independent of host speed.
+
+Three layers:
+
+  NVMStore        persistent image (survives ``crash()``) + traffic stats
+  VolatileCache   fully-associative LRU write-back cache over the store
+  CrashEmulator   couples program "truth" arrays with cache+store; provides
+                  ``crash()`` / ``recover()`` and region allocation
+
+Granularity: a *line* is ``line_bytes`` of a region's flattened buffer.
+Program views ("truth") always hold the latest values — the cache tracks
+*which lines would still be dirty in a volatile cache*, i.e. which bytes
+have NOT yet reached NVM. ``crash()`` discards exactly those bytes.
+
+Cost model notes (paper §II): flushing a clean or absent line costs the
+same order as flushing a dirty one, so ``flush`` charges per-line cost
+unconditionally. CLFLUSH also invalidates, so flushed lines leave the
+cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "NVMConfig",
+    "TrafficStats",
+    "NVMStore",
+    "VolatileCache",
+    "CrashEmulator",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NVMConfig:
+    """Cache geometry + bandwidth cost model.
+
+    Defaults mirror the paper's setup: 32 MB cache (their DRAM cache size;
+    we use it as the volatile-cache capacity for crash experiments can be
+    overridden per-test), 64 B lines, NVM bandwidth = DRAM/8 (Quartz
+    configuration), DRAM ~25.6 GB/s (2×DDR3-1600 as on their Xeon E5606
+    box), local HDD ~120 MB/s for checkpoint baselines.
+    """
+
+    cache_bytes: int = 32 * 1024 * 1024
+    dram_cache_bytes: int = 32 * 1024 * 1024  # NVM/DRAM system's DRAM cache
+    line_bytes: int = 64
+    dram_bw: float = 25.6e9          # B/s
+    nvm_read_bw: float = 25.6e9 / 8  # B/s (paper: up to 8x lower bandwidth)
+    nvm_write_bw: float = 25.6e9 / 8
+    hdd_bw: float = 120e6            # B/s, local hard drive baseline
+    flush_latency: float = 100e-9    # s per CLFLUSH instruction issue
+    nvm_same_as_dram: bool = False   # the paper's optimistic "NVM-only" config
+    # "lru": fully-associative LRU (paper's emulator default).
+    # "fifo": insertion-order replacement — models the conflict evictions a
+    # real set-associative cache inflicts on *hot* lines, which is what
+    # leaves XSBench's counters stale-by-different-amounts in NVM (Fig. 10).
+    replacement: str = "lru"
+
+    @property
+    def read_bw(self) -> float:
+        return self.dram_bw if self.nvm_same_as_dram else self.nvm_read_bw
+
+    @property
+    def write_bw(self) -> float:
+        return self.dram_bw if self.nvm_same_as_dram else self.nvm_write_bw
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    """Byte-accurate traffic + modeled-time accounting."""
+
+    nvm_bytes_written: int = 0
+    nvm_bytes_read: int = 0
+    lines_flushed: int = 0
+    lines_evicted: int = 0
+    modeled_seconds: float = 0.0
+
+    def charge_write(self, nbytes: int, cfg: NVMConfig) -> None:
+        self.nvm_bytes_written += nbytes
+        self.modeled_seconds += nbytes / cfg.write_bw
+
+    def charge_read(self, nbytes: int, cfg: NVMConfig) -> None:
+        self.nvm_bytes_read += nbytes
+        self.modeled_seconds += nbytes / cfg.read_bw
+
+    def charge_flush_issue(self, nlines: int, cfg: NVMConfig) -> None:
+        self.lines_flushed += nlines
+        self.modeled_seconds += nlines * cfg.flush_latency
+
+    def snapshot(self) -> "TrafficStats":
+        return dataclasses.replace(self)
+
+    def delta_since(self, prev: "TrafficStats") -> "TrafficStats":
+        return TrafficStats(
+            nvm_bytes_written=self.nvm_bytes_written - prev.nvm_bytes_written,
+            nvm_bytes_read=self.nvm_bytes_read - prev.nvm_bytes_read,
+            lines_flushed=self.lines_flushed - prev.lines_flushed,
+            lines_evicted=self.lines_evicted - prev.lines_evicted,
+            modeled_seconds=self.modeled_seconds - prev.modeled_seconds,
+        )
+
+
+class NVMStore:
+    """The persistent image: named flat byte-addressable regions.
+
+    ``image[name]`` is the array of bytes that would survive a crash.
+    All writes into the image are charged to ``stats`` at NVM bandwidth.
+    """
+
+    def __init__(self, cfg: NVMConfig):
+        self.cfg = cfg
+        self.image: Dict[str, np.ndarray] = {}
+        self.meta: Dict[str, Tuple[Tuple[int, ...], np.dtype]] = {}
+        self.stats = TrafficStats()
+
+    def alloc(self, name: str, shape: Tuple[int, ...], dtype) -> None:
+        if name in self.image:
+            raise KeyError(f"region {name!r} already allocated")
+        dt = np.dtype(dtype)
+        self.image[name] = np.zeros(int(np.prod(shape)), dtype=dt)
+        self.meta[name] = (tuple(shape), dt)
+
+    def free(self, name: str) -> None:
+        self.image.pop(name, None)
+        self.meta.pop(name, None)
+
+    def writeback(self, name: str, lo: int, hi: int, src: np.ndarray) -> None:
+        """Persist src[lo:hi) (flat element indices) into the image."""
+        self.image[name][lo:hi] = src[lo:hi]
+        self.stats.charge_write((hi - lo) * src.itemsize, self.cfg)
+
+    def read_view(self, name: str) -> np.ndarray:
+        """The surviving (post-crash) contents, shaped. No cost charged:
+        recovery-time reads are charged by the recovery code itself."""
+        shape, _ = self.meta[name]
+        return self.image[name].reshape(shape)
+
+
+class VolatileCache:
+    """Fully-associative LRU write-back cache.
+
+    Keys are ``(region, entry_index)`` where an *entry* covers
+    ``sector_lines`` consecutive cache lines of that region (sector_lines=1
+    reproduces exact per-line behavior; large read-mostly regions register
+    with coarser sectors so emulation stays fast while capacity pressure —
+    the thing that drives the paper's eviction behavior — is preserved:
+    entries are *weighted* by their line count against the capacity).
+
+    Only occupancy and dirtiness are tracked — the newest data lives in
+    the emulator's truth arrays; the store's image holds whatever has been
+    written back.
+    """
+
+    def __init__(self, store: NVMStore, cfg: NVMConfig):
+        self.store = store
+        self.cfg = cfg
+        self.capacity_lines = max(1, cfg.cache_bytes // cfg.line_bytes)
+        # value = dirty flag; weight per entry is a per-region constant
+        self._lru: "OrderedDict[Tuple[str, int], bool]" = OrderedDict()
+        self._weight_used = 0
+        self._truth: Dict[str, np.ndarray] = {}
+        self._sector_lines: Dict[str, int] = {}
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, truth_flat: np.ndarray, sector_lines: int = 1) -> None:
+        self._truth[name] = truth_flat
+        self._sector_lines[name] = max(1, int(sector_lines))
+
+    def unregister(self, name: str) -> None:
+        self._truth.pop(name, None)
+        stale = [k for k in self._lru if k[0] == name]
+        w = self._sector_lines.get(name, 1)
+        for k in stale:
+            del self._lru[k]
+            self._weight_used -= w
+        self._sector_lines.pop(name, None)
+
+    # -- geometry ----------------------------------------------------------
+    def _elems_per_entry(self, name: str) -> int:
+        epl = max(1, self.cfg.line_bytes // self._truth[name].itemsize)
+        return epl * self._sector_lines[name]
+
+    def _entry_range(self, name: str, lo: int, hi: int) -> range:
+        epe = self._elems_per_entry(name)
+        return range(lo // epe, (hi - 1) // epe + 1) if hi > lo else range(0)
+
+    # -- internals ----------------------------------------------------------
+    def _evict_one(self) -> None:
+        (name, entry), dirty = self._lru.popitem(last=False)
+        self._weight_used -= self._sector_lines[name]
+        if dirty:
+            self._writeback_entry(name, entry)
+        self.store.stats.lines_evicted += self._sector_lines[name]
+
+    def _writeback_entry(self, name: str, entry: int) -> None:
+        truth = self._truth[name]
+        epe = self._elems_per_entry(name)
+        lo = entry * epe
+        hi = min(lo + epe, truth.shape[0])
+        if hi > lo:
+            self.store.writeback(name, lo, hi, truth)
+
+    def _touch(self, name: str, entry: int, dirty: bool) -> None:
+        key = (name, entry)
+        if self.cfg.replacement == "fifo":
+            # FIFO: hits update dirtiness in place (no reordering), so hot
+            # lines age out periodically like victims of set conflicts
+            prev = self._lru.get(key)
+            if prev is not None:
+                if dirty and not prev:
+                    self._lru[key] = True
+                return
+            w = self._sector_lines[name]
+            while self._weight_used + w > self.capacity_lines and self._lru:
+                self._evict_one()
+            self._weight_used += w
+            self._lru[key] = dirty
+            return
+        prev = self._lru.pop(key, None)
+        if prev is None:
+            w = self._sector_lines[name]
+            while self._weight_used + w > self.capacity_lines and self._lru:
+                self._evict_one()
+            self._weight_used += w
+        self._lru[key] = dirty or bool(prev)
+
+    # -- program-visible operations ------------------------------------------
+    def write(self, name: str, lo: int, hi: int) -> None:
+        """Program stored truth[lo:hi): allocate entries, mark dirty."""
+        for entry in self._entry_range(name, lo, hi):
+            self._touch(name, entry, dirty=True)
+
+    def read(self, name: str, lo: int, hi: int) -> None:
+        """Program loaded truth[lo:hi): allocate entries (miss => charge
+        NVM read), do not dirty."""
+        itemsize = self._truth[name].itemsize
+        epe = self._elems_per_entry(name)
+        for entry in self._entry_range(name, lo, hi):
+            if (name, entry) not in self._lru:
+                self.store.stats.charge_read(epe * itemsize, self.cfg)
+            self._touch(name, entry, dirty=False)
+
+    def flush(self, name: str, lo: int = 0, hi: Optional[int] = None) -> None:
+        """CLFLUSH truth[lo:hi): write back dirty entries, invalidate,
+        charge per-line cost unconditionally (paper §II: flushing clean or
+        absent lines costs the same order as dirty ones)."""
+        if hi is None:
+            hi = self._truth[name].shape[0]
+        entries = self._entry_range(name, lo, hi)
+        sector = self._sector_lines[name]
+        self.store.stats.charge_flush_issue(len(entries) * sector, self.cfg)
+        itemsize = self._truth[name].itemsize
+        epe = self._elems_per_entry(name)
+        for entry in entries:
+            key = (name, entry)
+            dirty = self._lru.pop(key, None)
+            if dirty is not None:
+                self._weight_used -= sector
+            if dirty:
+                self._writeback_entry(name, entry)
+            else:
+                # clean/absent flush still occupies the memory pipeline
+                self.store.stats.modeled_seconds += (
+                    epe * itemsize / self.store.cfg.write_bw
+                )
+
+    def drain(self) -> None:
+        """Write back everything (normal program termination)."""
+        while self._lru:
+            (name, entry), dirty = self._lru.popitem(last=False)
+            self._weight_used -= self._sector_lines[name]
+            if dirty:
+                self._writeback_entry(name, entry)
+
+    def crash(self) -> int:
+        """Power loss: volatile contents vanish. Returns #dirty entries lost."""
+        lost = sum(1 for d in self._lru.values() if d)
+        self._lru.clear()
+        self._weight_used = 0
+        return lost
+
+    @property
+    def occupancy_lines(self) -> int:
+        return self._weight_used
+
+    def dirty_entries(self, name: str) -> Iterator[int]:
+        for (n, entry), dirty in self._lru.items():
+            if n == name and dirty:
+                yield entry
+
+
+class CrashEmulator:
+    """Couples program arrays with the cache+NVM pair (paper's crash
+    emulator). Allocate regions, compute on their ``.view`` arrays through
+    :class:`PersistentRegion` (see regions.py), then ``crash()`` to lose
+    volatile state and ``post_crash_view()`` to inspect what survived.
+    """
+
+    def __init__(self, cfg: Optional[NVMConfig] = None):
+        self.cfg = cfg or NVMConfig()
+        self.store = NVMStore(self.cfg)
+        self.cache = VolatileCache(self.store, self.cfg)
+        self._truth: Dict[str, np.ndarray] = {}
+        self.crashed = False
+
+    # region management ------------------------------------------------------
+    def alloc(self, name: str, shape, dtype=np.float64,
+              init: Optional[np.ndarray] = None, sector_lines: int = 1):
+        from .regions import PersistentRegion  # local to avoid cycle
+
+        shape = tuple(int(s) for s in shape)
+        self.store.alloc(name, shape, dtype)
+        truth = np.zeros(int(np.prod(shape)), dtype=np.dtype(dtype))
+        self._truth[name] = truth
+        self.cache.register(name, truth, sector_lines=sector_lines)
+        region = PersistentRegion(self, name, shape, np.dtype(dtype))
+        if init is not None:
+            region[...] = np.asarray(init, dtype=dtype).reshape(shape)
+        return region
+
+    def free(self, name: str) -> None:
+        self.cache.unregister(name)
+        self.store.free(name)
+        self._truth.pop(name, None)
+
+    # crash / recovery ---------------------------------------------------------
+    def crash(self) -> int:
+        """Drop the volatile cache; reload every truth array from the NVM
+        image (the program must now see only what survived)."""
+        lost = self.cache.crash()
+        for name, truth in self._truth.items():
+            truth[:] = self.store.image[name]
+        self.crashed = True
+        return lost
+
+    def post_crash_view(self, name: str) -> np.ndarray:
+        return self.store.read_view(name)
+
+    def truth_flat(self, name: str) -> np.ndarray:
+        return self._truth[name]
+
+    # stats -------------------------------------------------------------------
+    @property
+    def stats(self) -> TrafficStats:
+        return self.store.stats
+
+    def modeled_seconds(self) -> float:
+        return self.store.stats.modeled_seconds

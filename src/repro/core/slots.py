@@ -1,0 +1,182 @@
+"""Multi-slot asynchronous state store with verified recovery.
+
+The heavy training state (params + optimizer state) is written
+round-robin into K slots with **no synchronous barrier** — the TPU
+analogue of the paper's reliance on hardware cache eviction: writes
+drain opportunistically; a crash mid-write tears the slot. Recovery
+backward-scans slots newest-first (paper §III.B) and accepts the first
+slot whose every tensor verifies against the synchronously-persisted
+checksum ledger (core/acc_state.py).
+
+Format per slot directory:
+    meta.json            {"step": int, "complete": bool}
+    <flat-key>.npy       one file per pytree leaf (numpy, host layout)
+
+``complete`` is written LAST — but recovery must not trust it (a torn
+filesystem can persist meta before data); it is only a fast-path hint.
+Verification is always checksum-based.
+
+``AsyncSlotWriter`` runs writes on a daemon thread; ``crash()`` abandons
+the queue mid-flight exactly like a real power loss would.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["SlotStore", "AsyncSlotWriter", "flatten_state", "unflatten_state"]
+
+
+def flatten_state(tree) -> Dict[str, np.ndarray]:
+    """pytree -> {path: ndarray} with deterministic '/'-joined keys."""
+    import jax
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def unflatten_state(template, flat: Dict[str, np.ndarray]):
+    """Rebuild a pytree shaped like ``template`` from the flat dict."""
+    import jax
+    paths = [("/".join(_path_str(p) for p in path))
+             for path, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    leaves = [flat[k] for k in paths]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class SlotStore:
+    def __init__(self, root: str, n_slots: int = 3):
+        self.root = root
+        self.n_slots = n_slots
+        os.makedirs(root, exist_ok=True)
+
+    def slot_dir(self, k: int) -> str:
+        return os.path.join(self.root, f"slot_{k}")
+
+    def slot_for_step(self, step: int) -> int:
+        return (step // 1) % self.n_slots  # round-robin by write index
+
+    # -- write (synchronous core; async wrapper below) -------------------------
+    def write_slot(self, k: int, step: int, state_flat: Dict[str, np.ndarray],
+                   tear_after: Optional[int] = None) -> None:
+        """Write slot k. ``tear_after`` (tests only) aborts after N leaves,
+        emulating a crash mid-write."""
+        d = self.slot_dir(k)
+        tmp_meta = {"step": step, "complete": False}
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "meta.json"), "w") as fh:
+            json.dump(tmp_meta, fh)
+        for i, (key, arr) in enumerate(sorted(state_flat.items())):
+            if tear_after is not None and i >= tear_after:
+                return  # torn: remaining leaves keep their old bytes
+            np.save(os.path.join(d, key.replace("/", "__") + ".npy"), arr)
+        with open(os.path.join(d, "meta.json"), "w") as fh:
+            json.dump({"step": step, "complete": True}, fh)
+
+    # -- read -------------------------------------------------------------------
+    def read_meta(self, k: int) -> Optional[Dict]:
+        try:
+            with open(os.path.join(self.slot_dir(k), "meta.json")) as fh:
+                return json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    def read_slot(self, k: int) -> Optional[Dict[str, np.ndarray]]:
+        d = self.slot_dir(k)
+        if not os.path.isdir(d):
+            return None
+        out = {}
+        for fn in os.listdir(d):
+            if fn.endswith(".npy"):
+                try:
+                    out[fn[:-4].replace("__", "/")] = np.load(
+                        os.path.join(d, fn))
+                except (OSError, ValueError):
+                    return None  # torn file
+        return out or None
+
+    def slots_by_recency(self) -> List[Tuple[int, int]]:
+        """[(slot, step)] sorted newest first."""
+        metas = []
+        for k in range(self.n_slots):
+            m = self.read_meta(k)
+            if m is not None and "step" in m:
+                metas.append((k, int(m["step"])))
+        return sorted(metas, key=lambda t: -t[1])
+
+    def wipe(self) -> None:
+        shutil.rmtree(self.root, ignore_errors=True)
+        os.makedirs(self.root, exist_ok=True)
+
+
+class AsyncSlotWriter:
+    """Daemon-thread writer: enqueue state snapshots; crash() drops the
+    queue and kills the in-flight write at the next leaf boundary."""
+
+    def __init__(self, store: SlotStore):
+        self.store = store
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._crashed = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self._write_idx = 0
+
+    def submit(self, step: int, state_flat: Dict[str, np.ndarray]) -> None:
+        slot = self._write_idx % self.store.n_slots
+        self._write_idx += 1
+        self._idle.clear()
+        self._q.put((slot, step, state_flat))
+
+    def _run(self) -> None:
+        while True:
+            slot, step, flat = self._q.get()
+            if self._crashed.is_set():
+                continue
+            d = self.store.slot_dir(slot)
+            os.makedirs(d, exist_ok=True)
+            with open(os.path.join(d, "meta.json"), "w") as fh:
+                json.dump({"step": step, "complete": False}, fh)
+            for i, (key, arr) in enumerate(sorted(flat.items())):
+                if self._crashed.is_set():
+                    break  # power loss mid-write: slot is torn
+                np.save(os.path.join(d, key.replace("/", "__") + ".npy"), arr)
+            else:
+                if not self._crashed.is_set():
+                    with open(os.path.join(d, "meta.json"), "w") as fh:
+                        json.dump({"step": step, "complete": True}, fh)
+            if self._q.empty():
+                self._idle.set()
+
+    def drain(self, timeout: float = 60.0) -> None:
+        self._idle.wait(timeout)
+
+    def crash(self) -> None:
+        """Simulated power loss: abandon queued + in-flight writes."""
+        self._crashed.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

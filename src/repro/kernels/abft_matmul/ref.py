@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the ABFT matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["abft_matmul_ref", "abft_encode_full_ref"]
+
+
+@jax.jit
+def abft_matmul_ref(a: jax.Array, b: jax.Array):
+    """Reference: (C, row_checksums (m,), col_checksums (n,)) in f32
+    accumulation regardless of input dtype (matches the kernel's MXU
+    accumulation semantics)."""
+    c32 = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return c32.astype(a.dtype), jnp.sum(c32, axis=1), jnp.sum(c32, axis=0)
+
+
+@jax.jit
+def abft_encode_full_ref(a: jax.Array, b: jax.Array):
+    """Full-checksum product C_f = A_c @ B_r (paper Eq. 5), (m+1, n+1)."""
+    c, row, col = abft_matmul_ref(a, b)
+    total = jnp.sum(row)
+    top = jnp.concatenate([c.astype(jnp.float32), row[:, None]], axis=1)
+    bottom = jnp.concatenate([col, total[None]])[None, :]
+    return jnp.concatenate([top, bottom], axis=0)

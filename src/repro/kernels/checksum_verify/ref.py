@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for checksum verification."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["verify_ref"]
+
+
+@jax.jit
+def verify_ref(cf: jax.Array, rtol: float = 1e-6, atol: float = 1e-4):
+    """Residuals + verdict for a full-checksum matrix cf (m+1, n+1).
+
+    Returns (ok: bool scalar, row_resid (m,), col_resid (n,)).
+    """
+    data = cf[:-1, :-1].astype(jnp.float32)
+    row_resid = cf[:-1, -1].astype(jnp.float32) - jnp.sum(data, axis=1)
+    col_resid = cf[-1, :-1].astype(jnp.float32) - jnp.sum(data, axis=0)
+    scale = jnp.maximum(jnp.max(jnp.abs(cf)).astype(jnp.float32), 1.0)
+    tol = atol + rtol * scale
+    ok = (jnp.max(jnp.abs(row_resid)) <= tol) & (jnp.max(jnp.abs(col_resid)) <= tol)
+    return ok, row_resid, col_resid

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blockwise causal attention (flash-attention fwd).
+
+Grid (B*H, S/bq, S/bk) with the KV dim innermost; VMEM scratch carries
+the online-softmax state (f32 accumulator (bq, hd), running max m and
+normalizer l) across KV blocks, so the (S, S) score matrix never touches
+HBM — the structural fix for the memory-bound prefill cells in the
+roofline table (llama3 prefill_32k: 17 GB of f32 logits per layer with
+naive attention).
+
+GQA without materializing the KV repeat: the K/V BlockSpec index maps
+divide the batch*head grid coordinate by the group size G, so each
+query-head block reads its KV head's block directly.
+
+Fully-masked blocks contribute exactly zero via masked exp (m is clamped
+to a finite floor so empty blocks cannot produce NaN through
+exp(-inf - -inf)).
+
+Forward-only: serving/prefill path. The training path keeps the jnp
+attention (XLA autodiff); a custom-vjp flash backward is future work
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, scale: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        logits = jnp.where(mask, logits, NEG_INF)
+    else:
+        mask = jnp.ones((bq, bk), jnp.bool_)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # masked positions must contribute exactly 0 even when the whole
+    # block is masked (m_new == NEG_INF would give exp(0) = 1 otherwise)
+    p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           groups: int = 1, causal: bool = True,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, S, hd); k/v: (BH // groups, S, hd). S % bq == S % bk == 0.
+    Returns (BH, S, hd) in q.dtype."""
+    BH, S, hd = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    assert k.shape[0] * groups == BH, (q.shape, k.shape, groups)
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // groups, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // groups, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

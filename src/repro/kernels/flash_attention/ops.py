@@ -1,0 +1,46 @@
+"""jit'd wrapper: (B, S, H, hd) GQA attention via the flash kernel.
+
+Forward-only (prefill/serving). Pads S to the block size; GQA handled by
+the kernel's index maps (no KV repeat materialization).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..abft_matmul.ops import on_tpu
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+def _pick_block(S: int, target: int = 512) -> int:
+    for cand in (target, 256, 128, 64, 32, 16, 8):
+        if S % cand == 0 and cand <= S:
+            return cand
+    return S
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def _impl(q, k, v, *, causal: bool, interpret: bool):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    bq = bk = _pick_block(S)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    out = flash_attention_pallas(qf, kf, vf, groups=groups, causal=causal,
+                                 bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool | None = None):
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd), H % KV == 0."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _impl(q, k, v, causal=causal, interpret=interpret)

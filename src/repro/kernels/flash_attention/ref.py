@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for blockwise causal attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  groups: int = 1, causal: bool = True) -> jax.Array:
+    """q: (BH, S, hd); k/v: (BH//groups, S, hd)."""
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=0)
+        v = jnp.repeat(v, groups, axis=0)
+    S = q.shape[1]
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    if causal:
+        mask = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+        logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

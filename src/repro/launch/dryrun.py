@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+The two lines above MUST run before any other import — jax locks the
+device count at first init, and the production meshes need 512 host
+placeholder devices. Smoke tests / benches import through other entry
+points and see the real single device.
+
+For every (architecture x applicable input shape) cell this script:
+    1. builds the production mesh — (16,16) single-pod and (2,16,16)
+       multi-pod — and the partition rules for that cell,
+    2. lowers the jitted train_step / forward / serve_step against
+       ShapeDtypeStruct stand-ins (no allocation anywhere),
+    3. ``.compile()``s it (GSPMD partitioning must succeed: sharding
+       mismatches, compile-time OOMs, unsupported collectives are bugs),
+    4. records memory_analysis(), cost_analysis(), and the collective-op
+       byte totals parsed from the optimized HLO,
+    5. writes one JSON artifact per cell under benchmarks/artifacts/.
+
+Skips (recorded, per DESIGN.md §4): decode shapes for the encoder-only
+hubert; long_500k for pure full-attention archs (needs sub-quadratic
+attention); long_500k runs for ssm/hybrid.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from ..models.registry import build_model, get_config, list_archs
+from ..optim import init_error_state
+from ..sharding.partition import batch_shardings, make_rules
+from .mesh import make_production_mesh
+from .specs import batch_specs
+from .steps import build_serve_step, build_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+# dtype sizes for HLO byte parsing
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def applicable_shapes(cfg: ModelConfig) -> Dict[str, str]:
+    """shape name -> 'run' | skip reason."""
+    out = {}
+    for name, shape in SHAPES.items():
+        if shape.kind == "decode":
+            if not cfg.is_decoder:
+                out[name] = "skip: encoder-only arch has no decode step"
+                continue
+            if name == "long_500k" and not cfg.is_ssm_family:
+                out[name] = ("skip: full-attention arch — 500k decode needs "
+                             "sub-quadratic attention (DESIGN.md §4)")
+                continue
+        out[name] = "run"
+    return out
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-tensor bytes of every collective op in optimized HLO."""
+    totals = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # e.g.  %all-reduce.5 = f32[4096,14336]{1,0} all-reduce(...)
+    #       %ag = (bf16[128,32]{...}, bf16[64]{...}) all-gather(...)
+    line_re = re.compile(r"=\s*(\(.*?\)|\S+?)\s+(" + "|".join(_COLLECTIVES)
+                         + r")\(")
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        if "fusion" in line and "calls=" in line:
+            pass
+        m = line_re.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        if f" {op}-start(" in line or f" {op}-done(" in line:
+            # async pairs: only count the -start (has the payload type)
+            pass
+        nbytes = 0.0
+        for dt, dims in shape_re.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        # "-done" ops repeat the payload of their "-start": skip them
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        totals[op] += nbytes
+        counts[op] += 1
+    return {"bytes": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def _mem_analysis_dict(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "serialized_size_in_bytes"):
+        if hasattr(ma, attr):
+            try:
+                out[attr] = int(getattr(ma, attr))
+            except Exception:
+                pass
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               tcfg: Optional[TrainConfig] = None) -> Tuple[object, object]:
+    """-> (lowered, mesh). Lowering only (no compile)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    tcfg = tcfg or TrainConfig(
+        remat="dots",
+        optimizer="adafactor" if arch.startswith("kimi") else "adamw")
+
+    if shape.kind == "train":
+        rules = make_rules(mesh, fsdp=tcfg.fsdp)
+        batch = batch_specs(cfg, shape)
+        jitted, sh, opt_init = build_train_step(api, tcfg, rules,
+                                                donate=True,
+                                                batch_template=batch)
+        params_shapes = sh["params_shapes"]
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        err_shapes = jax.eval_shape(init_error_state, params_shapes)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        lowered = jitted.lower(params_shapes, opt_shapes, err_shapes, batch,
+                               rng)
+        return lowered, mesh
+
+    if shape.kind == "prefill":
+        rules = make_rules(mesh, fsdp=False)
+        from ..sharding.partition import params_shardings
+        params_shapes, axes = api.abstract_init(jax.random.PRNGKey(0))
+        params_sh = params_shardings(rules, axes)
+        batch = batch_specs(cfg, shape)
+        batch_sh = batch_shardings(rules, batch)
+
+        # NOTE: the Pallas flash-attention path (models/layers.flash_sdpa)
+        # is validated and wired for TPU runs, but the *dry-run* keeps the
+        # XLA attention: interpret-mode pallas lowers to interpreter
+        # machinery whose HLO is not representative of the Mosaic kernel
+        # (EXPERIMENTS.md §Perf iteration 8 reports the analytic
+        # projection instead).
+
+        def prefill(params, b):
+            return api.forward(params, b, mesh)
+
+        jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        return jitted.lower(params_shapes, batch), mesh
+
+    # decode
+    kv_ok = (cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp == 0)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    ssm_heads = (d_inner // cfg.ssm_head_dim) if cfg.ssm_state else 0
+    rules = make_rules(
+        mesh, fsdp=False,
+        kv_cache_heads_shardable=kv_ok,
+        shard_cache_seq=(shape.global_batch < mesh.shape["data"]),
+        shard_ssm_heads=(ssm_heads > 0 and ssm_heads % tp == 0),
+        replicate_attn_heads=not cfg.use_mla)
+    jitted, sh = build_serve_step(api, rules, batch=shape.global_batch,
+                                  max_len=shape.seq_len, donate=True)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jitted.lower(sh["params_shapes"], sh["cache_shapes"], tokens,
+                           pos)
+    return lowered, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, keep_hlo: bool = False) -> Dict:
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "status": "ok"}
+    cfg = get_config(arch)
+    reason = applicable_shapes(cfg).get(shape_name, "run")
+    if reason != "run":
+        rec["status"] = reason
+        if save:
+            _save(rec)
+        return rec
+    t0 = time.time()
+    try:
+        lowered, mesh = lower_cell(arch, shape_name, multi_pod)
+        rec["lower_seconds"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = round(time.time() - t1, 1)
+        rec["memory_analysis"] = _mem_analysis_dict(compiled)
+        rec["cost_analysis"] = _cost_analysis_dict(compiled)
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collective_bytes(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        if keep_hlo:
+            rec["hlo_path"] = _save_hlo(arch, shape_name, mesh_name, hlo)
+        shape = SHAPES[shape_name]
+        n = cfg.param_count()
+        n_active = cfg.param_count(active_only=True)
+        rec["model"] = {
+            "params": n, "active_params": n_active,
+            "tokens_per_step": shape.global_batch * (
+                shape.seq_len if shape.kind != "decode" else 1),
+            "kind": shape.kind,
+        }
+    except Exception as e:
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        _save(rec)
+    return rec
+
+
+def _save(rec: Dict) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path = os.path.join(ART_DIR, fn)
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1)
+    return path
+
+
+def _save_hlo(arch, shape, mesh_name, hlo) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{arch}__{shape}__{mesh_name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(hlo)
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_devices = len(jax.devices())
+    print(f"# devices: {n_devices} (host platform)", flush=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, multi, keep_hlo=args.keep_hlo)
+                status = rec["status"]
+                mesh_name = "multi " if multi else "single"
+                if status == "ok":
+                    ca = rec.get("cost_analysis", {})
+                    flops = ca.get("flops", 0.0)
+                    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+                    print(f"OK   {arch:24s} {shape:12s} {mesh_name} "
+                          f"{time.time()-t0:6.1f}s flops={flops:.3e} "
+                          f"coll={coll:.3e}B", flush=True)
+                elif status.startswith("skip"):
+                    print(f"SKIP {arch:24s} {shape:12s} {mesh_name} "
+                          f"({status})", flush=True)
+                else:
+                    failures += 1
+                    print(f"FAIL {arch:24s} {shape:12s} {mesh_name} "
+                          f"{status}", flush=True)
+    print(f"done; failures={failures}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Input builders: concrete batches (smoke/train) and ShapeDtypeStruct
+stand-ins (dry-run) for every architecture family x shape cell.
+
+The modality frontends of [audio]/[vlm] archs are STUBS per the
+assignment: ``frames`` / ``patches`` arrive as precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+__all__ = ["make_batch", "batch_specs", "decode_specs", "vlm_split"]
+
+
+def vlm_split(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    """(n_patches, n_text) for a vlm sequence of total length ``seq``."""
+    p = min(cfg.n_patches, seq // 2)
+    return p, seq - p
+
+
+def _vlm_positions(cfg: ModelConfig, batch: int, seq: int) -> np.ndarray:
+    """M-RoPE position streams: patches get (t=0, h, w) grid positions,
+    text continues sequentially on all three streams."""
+    p, t = vlm_split(cfg, seq)
+    side = max(1, int(np.sqrt(p)))
+    pos = np.zeros((3, seq), np.int32)
+    idx = np.arange(p)
+    pos[0, :p] = 0
+    pos[1, :p] = idx // side
+    pos[2, :p] = idx % side
+    text_pos = side + np.arange(t)
+    pos[:, p:] = text_pos[None, :]
+    return np.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key) -> Dict:
+    """Concrete batch for training/prefill."""
+    ks = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                        jnp.float32),
+            "labels": jax.random.randint(ks[1], (batch, seq), 0,
+                                         cfg.vocab_size, jnp.int32),
+        }
+    if cfg.family == "vlm":
+        p, t = vlm_split(cfg, seq)
+        labels = jax.random.randint(ks[1], (batch, t), 0, cfg.vocab_size,
+                                    jnp.int32)
+        return {
+            "tokens": jax.random.randint(ks[0], (batch, t), 0,
+                                         cfg.vocab_size, jnp.int32),
+            "patches": jax.random.normal(ks[2], (batch, p, cfg.d_model),
+                                         jnp.float32),
+            "positions": jnp.asarray(_vlm_positions(cfg, batch, seq)),
+            "labels": jnp.concatenate(
+                [jnp.full((batch, p), -100, jnp.int32), labels], axis=1),
+        }
+    tokens = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    labels = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    return {"tokens": tokens, "labels": labels}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for train/prefill lowering."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "audio":
+        return {"frames": sds((B, S, cfg.d_model), f32),
+                "labels": sds((B, S), i32)}
+    if cfg.family == "vlm":
+        p, t = vlm_split(cfg, S)
+        return {"tokens": sds((B, t), i32),
+                "patches": sds((B, p, cfg.d_model), f32),
+                "positions": sds((3, B, S), i32),
+                "labels": sds((B, S), i32)}
+    return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 init_cache) -> Tuple[Dict, object, object]:
+    """(token specs, cache specs, pos spec) for serve_step lowering.
+    ``init_cache(batch, max_len)`` is the arch's cache builder; it is
+    evaluated abstractly (eval_shape) so nothing is allocated."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: init_cache(B, S)[0])
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": tokens}, cache_shapes, pos

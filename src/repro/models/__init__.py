@@ -1,0 +1,9 @@
+"""Model zoo: unified LM (dense/moe/audio/vlm), SSM, and hybrid families.
+
+All architectures are selected through ``registry.build_model`` /
+``registry.get_config`` (the ``--arch`` flag of the launch scripts).
+"""
+
+from .registry import ModelApi, build_model, get_config, list_archs
+
+__all__ = ["ModelApi", "build_model", "get_config", "list_archs"]

@@ -1,0 +1,196 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+The backbone is ``n_layers`` Mamba2 blocks; a single shared
+attention+MLP block (one parameter set, Zamba's weight-sharing trick) is
+invoked before every ``attn_every``-layer segment of the backbone. For
+the assigned zamba2-1.2b (38 layers, every 6) that is 7 invocations of
+the shared block, each with its own KV-cache slot at decode time.
+
+Layer scan happens per segment (segments are statically sized: six
+6-layer segments + one 2-layer tail), so HLO stays compact while the
+shared block's params appear exactly once in the program.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import mamba2 as M
+from .lm import cross_entropy, stack_axes, stacked_init
+
+__all__ = ["init", "forward", "loss_fn", "init_cache", "decode_step",
+           "abstract_init", "segments"]
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """[(start, length)] segments of the mamba stack, one shared-attn
+    invocation before each."""
+    k = cfg.attn_every
+    out = []
+    s = 0
+    while s < cfg.n_layers:
+        out.append((s, min(k, cfg.n_layers - s)))
+        s += k
+    return out
+
+
+def _mamba_layer_init(cfg: ModelConfig, key):
+    km, kn = jax.random.split(key)
+    p, a = {}, {}
+    p["mamba"], a["mamba"] = M.mamba2_init(cfg, km)
+    p["norm"], a["norm"] = L.rmsnorm_init(cfg.d_model,
+                                          jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def _shared_block_init(cfg: ModelConfig, key):
+    ka, kf = jax.random.split(key)
+    p, a = {}, {}
+    p["attn"], a["attn"] = L.attention_init(cfg, ka)
+    p["ffn"], a["ffn"] = L.swiglu_init(cfg, kf)
+    p["norm_attn"], a["norm_attn"] = L.rmsnorm_init(
+        cfg.d_model, jnp.dtype(cfg.param_dtype))
+    p["norm_ffn"], a["norm_ffn"] = L.rmsnorm_init(
+        cfg.d_model, jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                          jnp.dtype(cfg.param_dtype))
+    p["layers"], a["layers"] = stacked_init(
+        lambda k: _mamba_layer_init(cfg, k), cfg.n_layers, k_layers)
+    p["shared"], a["shared"] = _shared_block_init(cfg, k_shared)
+    p["norm_f"], a["norm_f"] = L.rmsnorm_init(cfg.d_model,
+                                              jnp.dtype(cfg.param_dtype))
+    p["head"], a["head"] = L.dense_init(k_head, cfg.d_model,
+                                        cfg.padded_vocab, "embed", "vocab",
+                                        jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def abstract_init(cfg: ModelConfig, key):
+    box = {}
+
+    def params_only(k):
+        prms, axes = init(cfg, k)
+        box["axes"] = axes
+        return prms
+
+    shapes = jax.eval_shape(params_only, key)
+    return shapes, box["axes"]
+
+
+def _shared_block_apply(cfg: ModelConfig, sp: Dict, h: jax.Array,
+                        positions, cache=None, cache_index=None):
+    h_norm = L.rmsnorm(h, sp["norm_attn"], cfg.norm_eps)
+    attn_out, new_cache = L.attention_apply(cfg, sp["attn"], h_norm,
+                                            positions, cache=cache,
+                                            cache_index=cache_index)
+    h = h + attn_out
+    h = h + L.swiglu_apply(sp["ffn"],
+                           L.rmsnorm(h, sp["norm_ffn"], cfg.norm_eps))
+    return h, new_cache
+
+
+def _slice_layers(stacked, start: int, length: int):
+    return jax.tree.map(lambda x: jax.lax.slice_in_dim(x, start,
+                                                       start + length, axis=0),
+                        stacked)
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none") -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = L.shard_act(jnp.take(params["embed"], tokens, axis=0).astype(dt),
+                    mesh)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    def mamba_body(h, lp):
+        h = L.shard_act(h, mesh)
+        out = h + M.mamba2_apply(cfg, lp["mamba"],
+                                 L.rmsnorm(h, lp["norm"], cfg.norm_eps))
+        return L.shard_act(out, mesh), None
+
+    if remat == "full":
+        mamba_body = jax.checkpoint(
+            mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        mamba_body = jax.checkpoint(
+            mamba_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    for (start, length) in segments(cfg):
+        h, _ = _shared_block_apply(cfg, params["shared"], h, positions)
+        h, _ = jax.lax.scan(mamba_body, h,
+                            _slice_layers(params["layers"], start, length))
+    h = L.rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    return (h @ params["head"].astype(dt))[..., :cfg.vocab_size]
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none") -> jax.Array:
+    return cross_entropy(forward(cfg, params, batch, mesh, remat=remat),
+                         batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    n_seg = len(segments(cfg))
+    attn_one, attn_axes = L.attention_cache_init(cfg, batch, max_len)
+    ssm_one, ssm_axes = M.mamba2_cache_init(cfg, batch)
+    cache = {
+        "attn": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_seg,) + x.shape), attn_one),
+        "ssm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), ssm_one),
+    }
+    axes = {
+        "attn": jax.tree.map(lambda t: ("shared_sites",) + t, attn_axes,
+                             is_leaf=lambda t: isinstance(t, tuple)
+                             and all(isinstance(s, str) for s in t)),
+        "ssm": stack_axes(ssm_axes),
+    }
+    return cache, axes
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache, tokens: jax.Array,
+                pos: jax.Array, mesh=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def mamba_body(h, xs):
+        lp, lc = xs
+        out, new_lc = M.mamba2_decode_step(
+            cfg, lp["mamba"], L.rmsnorm(h, lp["norm"], cfg.norm_eps), lc)
+        return h + out, new_lc
+
+    new_attn = []
+    new_ssm = []
+    for si, (start, length) in enumerate(segments(cfg)):
+        seg_attn_cache = jax.tree.map(lambda x: x[si], cache["attn"])
+        h, seg_attn_new = _shared_block_apply(
+            cfg, params["shared"], h, positions,
+            cache=seg_attn_cache, cache_index=pos)
+        new_attn.append(seg_attn_new)
+        h, seg_ssm_new = jax.lax.scan(
+            mamba_body, h,
+            (_slice_layers(params["layers"], start, length),
+             _slice_layers(cache["ssm"], start, length)))
+        new_ssm.append(seg_ssm_new)
+    cache_out = {
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn),
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm),
+    }
+    h = L.rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    return (h @ params["head"].astype(dt))[..., :cfg.vocab_size], cache_out

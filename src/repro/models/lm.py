@@ -1,0 +1,287 @@
+"""Unified transformer LM covering the dense / moe / audio / vlm families.
+
+One parameterization + three entry points per family:
+
+  init(cfg, key)                        -> (params, axes)
+  forward(cfg, params, batch, mesh)     -> logits  (train / prefill)
+  decode_step(cfg, params, cache, ...)  -> (logits, new cache)
+
+Layers are *stacked* (leading n_layers dim) and driven by ``lax.scan`` so
+a 61-layer model lowers to the same HLO size as a 2-layer one — essential
+for the 512-device dry-run compiles. Family switches (GQA vs MLA, dense
+FFN vs MoE, causal vs bidirectional, RoPE vs M-RoPE vs none) all come
+from ModelConfig; there is no per-arch forward code.
+
+Batch dicts (built by launch/dryrun.input_specs):
+  dense/moe : tokens (B,S) int32, labels (B,S) int32
+  audio     : frames (B,S,D) f32 (frontend stub), labels (B,S)
+  vlm       : tokens (B,S_text), patches (B,P,D), positions (3,B,S),
+              labels (B,S)  [patch positions carry label -100 -> masked]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import mla as MLA
+from . import moe as MOE
+
+__all__ = ["init", "forward", "loss_fn", "init_cache", "decode_step",
+           "stacked_init", "cross_entropy"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, key):
+    ka, kf, kn = jax.random.split(key, 3)
+    p, a = {}, {}
+    if cfg.use_mla:
+        p["attn"], a["attn"] = MLA.mla_init(cfg, ka)
+    else:
+        p["attn"], a["attn"] = L.attention_init(cfg, ka)
+    if cfg.n_experts:
+        p["moe"], a["moe"] = MOE.moe_init(cfg, kf)
+        if cfg.n_shared_experts:
+            import dataclasses
+            shared_ff = cfg.moe_d_ff * cfg.n_shared_experts
+            p["shared"], a["shared"] = L.swiglu_init(cfg, kn, d_ff=shared_ff)
+    else:
+        p["ffn"], a["ffn"] = L.swiglu_init(cfg, kf)
+    p["norm_attn"], a["norm_attn"] = L.rmsnorm_init(cfg.d_model,
+                                                    jnp.dtype(cfg.param_dtype))
+    p["norm_ffn"], a["norm_ffn"] = L.rmsnorm_init(cfg.d_model,
+                                                  jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def stack_axes(axes):
+    """Prefix every axis tuple in a tree with the scanned 'layers' dim."""
+    return jax.tree.map(
+        lambda t: ("layers",) + t, axes,
+        is_leaf=lambda t: isinstance(t, tuple)
+        and all(isinstance(s, str) for s in t))
+
+
+def stacked_init(init_one_with_axes, n: int, key):
+    """vmap a (params, axes)-returning layer init over n rngs."""
+    keys = jax.random.split(key, n)
+    axes_box = {}
+
+    def params_only(k):
+        p, a = init_one_with_axes(k)
+        axes_box["axes"] = a
+        return p
+
+    params = jax.vmap(params_only)(keys)
+    return params, stack_axes(axes_box["axes"])
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    p, a = {}, {}
+    if cfg.embed_inputs:
+        p["embed"], a["embed"] = L.embed_init(k_emb, cfg.padded_vocab,
+                                              cfg.d_model,
+                                              jnp.dtype(cfg.param_dtype))
+    p["layers"], a["layers"] = stacked_init(
+        lambda k: _layer_init(cfg, k), cfg.n_layers, k_layers)
+    p["norm_f"], a["norm_f"] = L.rmsnorm_init(cfg.d_model,
+                                              jnp.dtype(cfg.param_dtype))
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        p["head"], a["head"] = L.dense_init(k_head, cfg.d_model,
+                                            cfg.padded_vocab, "embed",
+                                            "vocab",
+                                            jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def layer_axes(cfg: ModelConfig):
+    """Axes tree for ONE layer (metadata only, no arrays — eval_shape)."""
+    box = {}
+
+    def f(k):
+        prms, a = _layer_init(cfg, k)
+        box["a"] = a
+        return prms
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["a"]
+
+
+def abstract_init(cfg: ModelConfig, key):
+    """(ShapeDtypeStruct params, axes) — no allocation; dry-run entry."""
+    box = {}
+
+    def params_only(k):
+        prms, axes = init(cfg, k)
+        box["axes"] = axes
+        return prms
+
+    shapes = jax.eval_shape(params_only, key)
+    return shapes, box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _ffn_block(cfg: ModelConfig, lp: Dict, h_norm: jax.Array,
+               mesh) -> jax.Array:
+    B, S, D = h_norm.shape
+    if not cfg.n_experts:
+        return L.swiglu_apply(lp["ffn"], h_norm)
+    tokens = h_norm.reshape(B * S, D)
+    if mesh is None:
+        y = MOE.moe_apply_dense(cfg, lp["moe"], tokens)
+    else:
+        token_axes = tuple(n for n in mesh.axis_names)
+        y = MOE.moe_apply_ep(cfg, lp["moe"], tokens, mesh,
+                             token_axes=token_axes)
+    if cfg.n_shared_experts:
+        y = y + L.swiglu_apply(lp["shared"], tokens)
+    return y.reshape(B, S, D)
+
+
+def _layer_apply(cfg: ModelConfig, lp: Dict, h: jax.Array,
+                 positions: jax.Array, mrope_positions, mesh,
+                 cache: Optional[Dict] = None, cache_index=None,
+                 flash: bool = False):
+    h = L.shard_act(h, mesh)
+    h_norm = L.rmsnorm(h, lp["norm_attn"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, new_cache = MLA.mla_apply(
+            cfg, lp["attn"], h_norm, positions, cache=cache,
+            cache_index=cache_index)
+    else:
+        attn_out, new_cache = L.attention_apply(
+            cfg, lp["attn"], h_norm, positions,
+            mrope_positions=mrope_positions, cache=cache,
+            cache_index=cache_index, mesh=mesh, flash=flash)
+    h = L.shard_act(h + attn_out, mesh)
+    h = h + _ffn_block(cfg, lp, L.rmsnorm(h, lp["norm_ffn"], cfg.norm_eps),
+                       mesh)
+    return L.shard_act(h, mesh), new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_batch(cfg: ModelConfig, params: Dict, batch: Dict):
+    """-> (h (B,S,D), positions (B,S) or None, mrope (3,B,S) or None)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "audio":
+        h = batch["frames"].astype(dt)
+        B, S = h.shape[:2]
+        return h, jnp.arange(S)[None, :].repeat(B, 0), None
+    if cfg.family == "vlm":
+        text = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+        h = jnp.concatenate([batch["patches"].astype(dt), text], axis=1)
+        return h, None, batch["positions"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    B, S = batch["tokens"].shape
+    return h, jnp.arange(S)[None, :].repeat(B, 0), None
+
+
+def _head(cfg: ModelConfig, params: Dict, h: jax.Array) -> jax.Array:
+    logits = (h @ params["embed"].T.astype(h.dtype)
+              if cfg.tie_embeddings and cfg.embed_inputs
+              else h @ params["head"].astype(h.dtype))
+    # tables are padded to cfg.padded_vocab for even TP sharding
+    return logits[..., :cfg.vocab_size]
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none", flash: bool = False) -> jax.Array:
+    h, positions, mrope = _embed_batch(cfg, params, batch)
+    h = L.shard_act(h, mesh)
+    lax_ = layer_axes(cfg)
+
+    def body(h, lp):
+        lp = L.gather_weights(lp, lax_, mesh)   # ZeRO-3 per-layer gather
+        out, _ = _layer_apply(cfg, lp, h, positions, mrope, mesh,
+                              flash=flash)
+        return out, None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    return _head(cfg, params, h)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore: int = -100) -> jax.Array:
+    """Masked CE in f32; labels == ``ignore`` are excluded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none") -> jax.Array:
+    logits = forward(cfg, params, batch, mesh, remat=remat)
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.use_mla:
+        one, one_axes = MLA.mla_cache_init(cfg, batch, max_len)
+    else:
+        one, one_axes = L.attention_cache_init(cfg, batch, max_len)
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+    axes = jax.tree.map(lambda t: ("layers",) + t, one_axes,
+                        is_leaf=lambda t: isinstance(t, tuple)
+                        and all(isinstance(s, str) for s in t))
+    return cache, axes
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache, tokens: jax.Array,
+                pos: jax.Array, mesh=None):
+    """One decode step. tokens: (B, 1) int (or frames (B,1,D) for audio);
+    pos: scalar int32 — current cache length. Returns (logits (B,1,V),
+    new cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "audio":
+        raise ValueError("encoder-only architecture has no decode step")
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    mrope = None
+    if cfg.mrope_sections:
+        mrope = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+
+    def body(h, xs):
+        lp, layer_cache = xs
+        out, new_cache = _layer_apply(cfg, lp, h, positions, mrope, mesh,
+                                      cache=layer_cache, cache_index=pos)
+        return out, new_cache
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = L.rmsnorm(h, params["norm_f"], cfg.norm_eps)
+    return _head(cfg, params, h), new_cache

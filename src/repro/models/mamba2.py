@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training path uses the chunked SSD formulation: within a chunk the
+recurrence is materialized as a masked (semiseparable) attention-like
+matmul — MXU-friendly — and across chunks a tiny ``lax.scan`` carries the
+(heads, head_dim, state) SSM state. Decode is the O(1)-per-token
+recurrent update — the reason the long_500k shape is runnable for the
+ssm/hybrid archs and skipped for full-attention ones.
+
+Layout follows the reference Mamba2: in_proj emits [z | x | B | C | dt],
+depthwise causal conv (width 4) over [x | B | C], scalar-per-head decay
+A, head-wise dt, D skip, gated RMSNorm-free SiLU(z) gate, out_proj.
+Single B/C group (G=1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import Axes, Params, dense_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode_step",
+           "mamba2_cache_init", "mamba2_dims"]
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(d_inner, n_heads, conv_channels)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_state  # x, B, C get convolved
+    return d_inner, nheads, conv_ch
+
+
+def mamba2_init(cfg: ModelConfig, key) -> Tuple[Params, Axes]:
+    D = cfg.d_model
+    N = cfg.ssm_state
+    d_inner, nheads, conv_ch = mamba2_dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    d_proj = 2 * d_inner + 2 * N + nheads  # z, x, B, C, dt
+    p["in_proj"], a["in_proj"] = dense_init(ks[0], D, d_proj,
+                                            "embed", "ssm_proj", dtype)
+    p["conv_w"] = (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype)
+    a["conv_w"] = ("conv_width", "ssm_conv")
+    p["conv_b"] = jnp.zeros((conv_ch,), dtype)
+    a["conv_b"] = ("ssm_conv",)
+    # A in (-exp) parameterization, one scalar per head; dt bias for softplus
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32)
+    a["A_log"] = ("ssm_heads",)
+    p["dt_bias"] = jnp.full((nheads,), 0.5, jnp.float32)
+    a["dt_bias"] = ("ssm_heads",)
+    p["D_skip"] = jnp.ones((nheads,), jnp.float32)
+    a["D_skip"] = ("ssm_heads",)
+    p["out_proj"], a["out_proj"] = dense_init(ks[4], d_inner, D,
+                                              "ssm_inner", "embed", dtype)
+    return p, a
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, nheads, _ = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    z, xs, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(W):  # W=4: tiny unroll, fuses into one vectorized op
+        out = out + pad[:, i:i + u.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    sum_{j < u <= i} log_a[..., u], -inf above the diagonal."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_apply(cfg: ModelConfig, p: Params, x_in: jax.Array) -> jax.Array:
+    """Full-sequence SSD. x_in: (B, S, D) -> (B, S, D). S % chunk == 0
+    (callers pad; all assigned shapes are powers of two)."""
+    Bb, S, D = x_in.shape
+    N = cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    d_inner, nheads, _ = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    dt_ = x_in.dtype
+
+    proj = x_in @ p["in_proj"].astype(dt_)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_),
+                            p["conv_b"].astype(dt_))
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    log_a = dt * A[None, None, :]                                 # (B,S,H)
+
+    nc = S // Q
+    xh = xs.reshape(Bb, nc, Q, nheads, hd).astype(jnp.float32)
+    Bc = Bm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    la = log_a.reshape(Bb, nc, Q, nheads)
+    dtc = dt.reshape(Bb, nc, Q, nheads)
+    xdt = xh * dtc[..., None]                                     # fold dt in
+
+    # ---- intra-chunk (quadratic within chunk, MXU matmuls) ---------------
+    L = jnp.exp(_segsum(jnp.moveaxis(la, -1, -2)))   # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)   # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                         L, scores, xdt)
+
+    # ---- chunk summaries + inter-chunk scan ------------------------------
+    la_cum = jnp.cumsum(la, axis=2)                  # (B,nc,Q,H)
+    la_tot = la_cum[:, :, -1, :]                     # (B,nc,H)
+    decay_to_end = jnp.exp(la_tot[:, :, None, :] - la_cum)  # (B,nc,Q,H)
+    # state contribution of each chunk: (B,nc,H,hd,N)
+    S_c = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xdt)
+
+    def scan_fn(state, inp):
+        s_c, tot = inp                                # (B,H,hd,N), (B,H)
+        new = state * jnp.exp(tot)[:, :, None, None] + s_c
+        return new, state                             # emit state *entering*
+
+    init = jnp.zeros((Bb, nheads, hd, N), jnp.float32)
+    _, states_in = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(la_tot, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)         # (B,nc,H,hd,N)
+
+    # inter-chunk output: C_t · decay(t) · state_in
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(la_cum), states_in)
+
+    y = (y_intra + y_inter).reshape(Bb, S, nheads, hd)
+    y = y + xh.reshape(Bb, S, nheads, hd) * p["D_skip"][None, None, :, None]
+    y = y.reshape(Bb, S, d_inner).astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int):
+    """SSM state + conv tail. O(1) in sequence length."""
+    d_inner, nheads, conv_ch = mamba2_dims(cfg)
+    dtype = jnp.float32
+    cache = {
+        "state": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                           dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch),
+                          jnp.dtype(cfg.compute_dtype)),
+    }
+    axes = {
+        "state": ("batch", "ssm_heads", "head_dim", "state"),
+        "conv": ("batch", "conv_width", "ssm_conv"),
+    }
+    return cache, axes
+
+
+def mamba2_decode_step(cfg: ModelConfig, p: Params, x_tok: jax.Array,
+                       cache: Dict[str, jax.Array]):
+    """One token. x_tok: (B, 1, D) -> ((B, 1, D), new cache)."""
+    Bb = x_tok.shape[0]
+    N = cfg.ssm_state
+    d_inner, nheads, conv_ch = mamba2_dims(cfg)
+    hd = cfg.ssm_head_dim
+    dt_ = x_tok.dtype
+
+    proj = (x_tok[:, 0, :] @ p["in_proj"].astype(dt_))
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)   # (B, conv_ch)
+    window = jnp.concatenate([cache["conv"],
+                              conv_in[:, None, :].astype(cache["conv"].dtype)],
+                             axis=1)                   # (B, W, conv_ch)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(dt_), w)
+        + p["conv_b"].astype(dt_))
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt_h = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt_h * A[None, :])                                # (B,H)
+    xh = xs.reshape(Bb, nheads, hd).astype(jnp.float32)
+    state = (cache["state"] * da[:, :, None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xh, Bm.astype(jnp.float32), dt_h))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(Bb, d_inner).astype(dt_) * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    new_cache = {"state": state, "conv": window[:, 1:, :]}
+    return out, new_cache

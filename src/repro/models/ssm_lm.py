@@ -1,0 +1,109 @@
+"""Pure-SSM language model (mamba2-130m): attention-free Mamba2 stack."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import mamba2 as M
+from .lm import cross_entropy, stack_axes, stacked_init
+
+__all__ = ["init", "forward", "loss_fn", "init_cache", "decode_step",
+           "abstract_init"]
+
+
+def _layer_init(cfg: ModelConfig, key):
+    km, _ = jax.random.split(key)
+    p, a = {}, {}
+    p["mamba"], a["mamba"] = M.mamba2_init(cfg, km)
+    p["norm"], a["norm"] = L.rmsnorm_init(cfg.d_model,
+                                          jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                          jnp.dtype(cfg.param_dtype))
+    p["layers"], a["layers"] = stacked_init(
+        lambda k: _layer_init(cfg, k), cfg.n_layers, k_layers)
+    p["norm_f"], a["norm_f"] = L.rmsnorm_init(cfg.d_model,
+                                              jnp.dtype(cfg.param_dtype))
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = L.dense_init(k_head, cfg.d_model,
+                                            cfg.padded_vocab, "embed",
+                                            "vocab",
+                                            jnp.dtype(cfg.param_dtype))
+    return p, a
+
+
+def abstract_init(cfg: ModelConfig, key):
+    box = {}
+
+    def params_only(k):
+        prms, axes = init(cfg, k)
+        box["axes"] = axes
+        return prms
+
+    return jax.eval_shape(params_only, key), box["axes"]
+
+
+def _head(cfg, params, h):
+    logits = (h @ params["embed"].T.astype(h.dtype) if cfg.tie_embeddings
+              else h @ params["head"].astype(h.dtype))
+    return logits[..., :cfg.vocab_size]  # tables padded for TP
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none") -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+
+    def body(h, lp):
+        h = L.shard_act(h, mesh)
+        out = h + M.mamba2_apply(cfg, lp["mamba"],
+                                 L.rmsnorm(h, lp["norm"], cfg.norm_eps))
+        return L.shard_act(out, mesh), None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return _head(cfg, params, L.rmsnorm(h, params["norm_f"], cfg.norm_eps))
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict, mesh=None,
+            remat: str = "none") -> jax.Array:
+    return cross_entropy(forward(cfg, params, batch, mesh, remat=remat),
+                         batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    one, one_axes = M.mamba2_cache_init(cfg, batch)
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+    return cache, stack_axes(one_axes)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache, tokens: jax.Array,
+                pos: jax.Array, mesh=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def body(h, xs):
+        lp, lc = xs
+        out, new_lc = M.mamba2_decode_step(
+            cfg, lp["mamba"], L.rmsnorm(h, lp["norm"], cfg.norm_eps), lc)
+        return h + out, new_lc
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    return _head(cfg, params, L.rmsnorm(h, params["norm_f"], cfg.norm_eps)), \
+        new_cache

@@ -1,0 +1,9 @@
+"""Optimizers + distributed-optimization tricks (grad compression)."""
+
+from .adamw import (AdamWState, adafactor_init, adafactor_update, adamw_init,
+                    adamw_update, lr_schedule, make_optimizer)
+from .compression import compress_decompress, init_error_state
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "lr_schedule", "make_optimizer",
+           "compress_decompress", "init_error_state"]

@@ -1,0 +1,138 @@
+"""Optimizers: AdamW (fp32 state) and Adafactor (factored second moment).
+
+Functional, pytree-native (no optax dependency in this environment).
+AdamW is the default; Adafactor is the footprint option that makes the
+trillion-parameter kimi-k2 optimizer state feasible (DESIGN.md §7) —
+factored (row, col) second-moment statistics instead of a full fp32
+tensor, no first moment.
+
+Both expose the same interface:
+  init(params)                       -> opt_state
+  update(grads, opt_state, params)   -> (updates, new_opt_state)
+and updates are *applied steps* (add to params), so the ADCC layer can
+checksum them incrementally (core/acc_state.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+__all__ = ["AdamWState", "make_optimizer", "adamw_init", "adamw_update",
+           "adafactor_init", "adafactor_update", "lr_schedule"]
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(cfg: TrainConfig, grads, state: AdamWState, params
+                 ) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = -(lr * (m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+                        + cfg.weight_decay * p.astype(jnp.float32)))
+        return delta.astype(p.dtype), m_new, v_new
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(
+        leaves_g, treedef.flatten_up_to(state.m),
+        treedef.flatten_up_to(state.v), treedef.flatten_up_to(params))]
+    updates = treedef.unflatten([o[0] for o in out])
+    m_new = treedef.unflatten([o[1] for o in out])
+    v_new = treedef.unflatten([o[2] for o in out])
+    return updates, AdamWState(step=step, m=m_new, v=v_new)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; Shazeer & Stern 2018, simplified)
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    stats: Any   # per-leaf: dict(row=, col=) for >=2D, dict(v=) for <2D
+
+
+def adafactor_init(params) -> AdafactorState:
+    def init_one(p):
+        if p.ndim >= 2:
+            return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          stats=jax.tree.map(init_one, params))
+
+
+def adafactor_update(cfg: TrainConfig, grads, state: AdafactorState, params
+                     ) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    def upd(g, s, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if p.ndim >= 2:
+            row = decay * s["row"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            col = decay * s["col"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True) + eps
+            v_hat = (row / row_mean)[..., :, None] * col[..., None, :]
+            new_s = {"row": row, "col": col}
+        else:
+            v_hat = decay * s["v"] + (1 - decay) * g2
+            new_s = {"v": v_hat}
+        update = g32 / jnp.sqrt(v_hat + eps)
+        # update clipping (RMS <= 1) stabilizes warmup
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms)
+        delta = -(lr * (update + cfg.weight_decay * p.astype(jnp.float32)))
+        return delta.astype(p.dtype), new_s
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    out = [upd(g, s, p) for g, s, p in zip(
+        leaves_g, treedef.flatten_up_to(state.stats),
+        treedef.flatten_up_to(params))]
+    updates = treedef.unflatten([o[0] for o in out])
+    stats = treedef.unflatten([o[1] for o in out])
+    return updates, AdafactorState(step=step, stats=stats)
+
+
+def make_optimizer(cfg: TrainConfig):
+    """-> (init_fn, update_fn) per cfg.optimizer."""
+    if cfg.optimizer == "adafactor":
+        return adafactor_init, (lambda g, s, p: adafactor_update(cfg, g, s, p))
+    return adamw_init, (lambda g, s, p: adamw_update(cfg, g, s, p))
