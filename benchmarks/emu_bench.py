@@ -1,0 +1,135 @@
+"""Emulator throughput microbenchmark: reference vs vectorized backend.
+
+Replays one deterministic mixed read/write/flush trace over a large
+region (default: 1M float64 elements, cache sized at half the region so
+there is real eviction pressure) against both backends and reports
+emulator ops/sec, touched elements/sec, and the speedup. Also
+cross-checks that both backends end with byte-identical NVM images and
+identical traffic stats — a whole-trace equivalence run at benchmark
+scale.
+
+Results land in ``benchmarks/artifacts/BENCH_emulator.json``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.emu_bench``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.nvm import CrashEmulator, NVMConfig
+
+from .common import ART
+
+REGION = "data"
+
+
+def make_trace(n_elems: int, n_ops: int, seed: int
+               ) -> List[Tuple[str, int, int]]:
+    """(op, lo, hi) tuples: writes/reads dominate, flushes interleave."""
+    rng = np.random.default_rng(seed)
+    ops: List[Tuple[str, int, int]] = []
+    for _ in range(n_ops):
+        u = rng.random()
+        span = int(rng.integers(2048, 16384))
+        lo = int(rng.integers(0, max(1, n_elems - span)))
+        hi = min(n_elems, lo + span)
+        if u < 0.50:
+            ops.append(("write", lo, hi))
+        elif u < 0.80:
+            ops.append(("read", lo, hi))
+        elif u < 0.95:
+            ops.append(("flush", lo, hi))
+        else:
+            ops.append(("flush", 0, n_elems))
+    return ops
+
+
+def run_backend(backend: str, n_elems: int, cache_bytes: int,
+                trace, replacement: str):
+    emu = CrashEmulator(NVMConfig(backend=backend, cache_bytes=cache_bytes,
+                                  replacement=replacement))
+    region = emu.alloc(REGION, (n_elems,), np.float64)
+    region.view[:] = np.arange(n_elems, dtype=np.float64)  # truth, uncharged
+    t0 = time.perf_counter()
+    for op, lo, hi in trace:
+        if op == "write":
+            emu.write(REGION, lo, hi)
+        elif op == "read":
+            emu.read(REGION, lo, hi)
+        else:
+            emu.flush(REGION, lo, hi)
+    emu.drain()
+    elapsed = time.perf_counter() - t0
+    return emu, elapsed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--elements", type=int, default=1_000_000,
+                    help="region size in float64 elements")
+    ap.add_argument("--ops", type=int, default=2_000,
+                    help="trace length in emulator operations")
+    ap.add_argument("--cache-frac", type=float, default=0.5,
+                    help="cache capacity as a fraction of the region bytes")
+    ap.add_argument("--replacement", default="lru", choices=["lru", "fifo"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cache_bytes = max(64, int(args.elements * 8 * args.cache_frac))
+    trace = make_trace(args.elements, args.ops, args.seed)
+    touched = sum(hi - lo for _, lo, hi in trace)
+
+    results = {}
+    emus = {}
+    for backend in ("reference", "vectorized"):
+        emu, elapsed = run_backend(backend, args.elements, cache_bytes,
+                                   trace, args.replacement)
+        emus[backend] = emu
+        results[backend] = {
+            "seconds": elapsed,
+            "ops_per_sec": args.ops / elapsed,
+            "elements_per_sec": touched / elapsed,
+        }
+        print(f"{backend:>11}: {elapsed:8.3f} s   "
+              f"{results[backend]['ops_per_sec']:12.1f} ops/s   "
+              f"{results[backend]['elements_per_sec']:.3g} elem/s")
+
+    ref, vec = emus["reference"], emus["vectorized"]
+    images_equal = bool(np.array_equal(ref.store.image[REGION],
+                                       vec.store.image[REGION]))
+    stats_equal = dataclasses.asdict(ref.stats) == dataclasses.asdict(vec.stats)
+    speedup = results["vectorized"]["ops_per_sec"] / \
+        results["reference"]["ops_per_sec"]
+    print(f"   speedup: {speedup:.1f}x   images_equal={images_equal} "
+          f"stats_equal={stats_equal}")
+
+    payload = {
+        "config": {
+            "elements": args.elements, "ops": args.ops,
+            "cache_bytes": cache_bytes, "replacement": args.replacement,
+            "seed": args.seed, "touched_elements": touched,
+        },
+        "backends": results,
+        "speedup": speedup,
+        "images_equal": images_equal,
+        "stats_equal": stats_equal,
+    }
+    os.makedirs(ART, exist_ok=True)
+    out = os.path.join(ART, "BENCH_emulator.json")
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"wrote {out}")
+    if not (images_equal and stats_equal):
+        raise SystemExit("backend divergence at benchmark scale")
+
+
+if __name__ == "__main__":
+    main()

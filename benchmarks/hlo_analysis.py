@@ -115,8 +115,12 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     """2 * result_elems * contraction_size for dot ops."""
     res_elems, _ = _shape_elems_first(op.type_str)
-    # contraction size: from lhs shape + lhs_contracting_dims
-    operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+    # contraction size: from lhs shape + lhs_contracting_dims. Operand
+    # names keep their % sigil in both HLO flavors (jax 0.4 prints
+    # inline operand types, so bare-word matching would grab "f32").
+    operands = re.findall(r"%([\w.\-]+)", op.rest.split(")")[0])
+    if not operands:
+        operands = re.findall(r"([\w.\-]+)", op.rest.split(")")[0])
     mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     if not operands or mdims is None:
         return 2.0 * res_elems  # fallback

@@ -16,29 +16,44 @@ Roofline (reads dry-run artifacts): ``python -m benchmarks.roofline``.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
-               fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
-               kernel_bench, train_overhead)
+SUITE_NAMES = ("fig3", "fig4", "fig7", "fig8", "fig10_12", "fig13",
+               "train", "kernel")
 
-SUITES = {
-    "fig3": fig3_cg_recompute,
-    "fig4": fig4_cg_runtime,
-    "fig7": fig7_mm_recompute,
-    "fig8": fig8_mm_runtime,
-    "fig10_12": fig10_12_mc_correctness,
-    "fig13": fig13_mc_runtime,
-    "train": train_overhead,
-    "kernel": kernel_bench,
-}
+
+def _load_suites():
+    """Import the suite modules. Deferred until after --backend is
+    applied: several suites build their NVMConfig at module import time,
+    which snapshots REPRO_NVM_BACKEND."""
+    from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
+                   fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
+                   kernel_bench, train_overhead)
+    return {
+        "fig3": fig3_cg_recompute,
+        "fig4": fig4_cg_runtime,
+        "fig7": fig7_mm_recompute,
+        "fig8": fig8_mm_runtime,
+        "fig10_12": fig10_12_mc_correctness,
+        "fig13": fig13_mc_runtime,
+        "train": train_overhead,
+        "kernel": kernel_bench,
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(SUITES))
+    ap.add_argument("--only", default=None, choices=list(SUITE_NAMES))
+    ap.add_argument("--backend", default=None,
+                    choices=["reference", "vectorized"],
+                    help="NVM emulation backend for every suite "
+                         "(default: NVMConfig's default, i.e. vectorized)")
     args = ap.parse_args()
+    if args.backend:
+        os.environ["REPRO_NVM_BACKEND"] = args.backend
+    SUITES = _load_suites()
     names = [args.only] if args.only else list(SUITES)
     print("name,value,derived")
     t0 = time.time()

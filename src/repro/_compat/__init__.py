@@ -1,0 +1,6 @@
+"""Compatibility shims for optional third-party packages.
+
+The runtime container pins a jax toolchain but does not ship every dev
+dependency; modules here provide minimal stand-ins so the test suite
+stays runnable (see hypothesis_shim).
+"""

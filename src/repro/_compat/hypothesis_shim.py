@@ -1,0 +1,112 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` package.
+
+The test suite uses a small slice of hypothesis (``given``/``settings``
+plus the ``integers``/``floats``/``booleans``/``lists``/``tuples``
+strategies). When the real package is unavailable, :func:`install`
+registers drop-in modules under ``sys.modules`` so
+``from hypothesis import given, settings, strategies as st`` keeps
+working. Examples are drawn from a numpy Generator seeded by the test's
+qualified name, so runs are reproducible and failures are replayable.
+
+This is *not* hypothesis: there is no shrinking and no coverage-guided
+search — just ``max_examples`` random examples per test.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, allow_nan: bool = False,
+           allow_infinity: bool = False) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.draw(rng) for e in elements))
+
+
+def sampled_from(options) -> _Strategy:
+    seq = list(options)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def given(**strategies):
+    def decorate(fn):
+        def runner(*args):
+            n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.adler32(fn.__qualname__.encode())
+            for example in range(n):
+                rng = np.random.default_rng((seed, example))
+                kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example #{example} for "
+                        f"{fn.__qualname__}: {kwargs!r}") from exc
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` if the real one is missing."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "tuples",
+                 "sampled_from"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

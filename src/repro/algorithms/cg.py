@@ -164,8 +164,8 @@ class ADCC_CG:
     # -- one CG iteration against the emulator ---------------------------------
     def _touch_matvec_reads(self) -> None:
         if self.emulate_reads:
-            self.emu.cache.read("A.data", 0, self.A.data.shape[0])
-            self.emu.cache.read("A.indices", 0, self.A.indices.shape[0])
+            self.emu.read("A.data", 0, self.A.data.shape[0])
+            self.emu.read("A.indices", 0, self.A.indices.shape[0])
 
     def _iterate(self, i: int, rho: float) -> float:
         """Iteration i: consumes version i, produces version i+1."""

@@ -87,8 +87,8 @@ class ABFTMatmul:
         checksum row and column."""
         self.counter.set(s)  # which chunk we are in (one line flush)
         k, n = self.k, self.n
-        self.emu.cache.read("Ac", 0, self.Ac.size)           # stream inputs
-        self.emu.cache.read("Br", s * k * (n + 1), (s + 1) * k * (n + 1))
+        self.emu.read("Ac", 0, self.Ac.size)                 # stream inputs
+        self.emu.read("Br", s * k * (n + 1), (s + 1) * k * (n + 1))
         block = self.Ac[:, s * k:(s + 1) * k] @ self.Br[s * k:(s + 1) * k, :]
         reg = self.C_s[s]
         reg[...] = block
@@ -106,7 +106,7 @@ class ABFTMatmul:
         lo, hi = self.row_blocks[bi]
         acc = np.zeros((hi - lo, self.n + 1))
         for s in range(self.nchunks):
-            self.emu.cache.read(f"C_s{s}", lo * (self.n + 1), hi * (self.n + 1))
+            self.emu.read(f"C_s{s}", lo * (self.n + 1), hi * (self.n + 1))
             acc += self.C_s[s].view[lo:hi, :]
         self.C_temp[lo:hi, :] = acc
         for i in range(lo, hi):                        # row checksum cells

@@ -134,7 +134,7 @@ class ADCC_XSBench:
         idx = int(np.searchsorted(self.egrid_np, e)) - 1
         idx = min(max(idx, 0), cfg.grid_points - 2)
         for probe in self._bsearch_probes(cfg.grid_points, idx):
-            self.emu.cache.read("egrid", probe, probe + 1)
+            self.emu.read("egrid", probe, probe + 1)
 
         t = (e - self.egrid_np[idx]) / max(
             self.egrid_np[idx + 1] - self.egrid_np[idx], 1e-300)
@@ -142,8 +142,8 @@ class ADCC_XSBench:
         row = cfg.n_nuclides * N_TYPES
         for nuclide in self.materials[mat]:
             lo = idx * row + int(nuclide) * N_TYPES
-            self.emu.cache.read("nuclide_grid", lo, lo + N_TYPES)
-            self.emu.cache.read("nuclide_grid", lo + row, lo + row + N_TYPES)
+            self.emu.read("nuclide_grid", lo, lo + N_TYPES)
+            self.emu.read("nuclide_grid", lo + row, lo + row + N_TYPES)
             xs0 = self.nuc_np[idx, nuclide]
             xs1 = self.nuc_np[idx + 1, nuclide]
             macro += xs0 * (1.0 - t) + xs1 * t

@@ -2,7 +2,9 @@
 crash consistence (ADCC) for NVM, adapted to a JAX/TPU training stack.
 
 Substrate (paper SIII.A):
-  nvm, regions            emulated NVM + volatile LRU cache + crash semantics
+  nvm, regions            emulated NVM + volatile cache + crash semantics
+  backends                pluggable cache emulation: exact per-entry
+                          "reference" oracle / batched "vectorized" default
 Baselines (paper test cases 2-5):
   checkpoint_baseline     synchronous full-copy checkpoint (hdd/nvm/nvm+dram)
   transactions            PMEM-style undo-log transactions
@@ -15,6 +17,13 @@ ADCC-for-training (TPU adaptation, DESIGN.md S2-3):
   acc_state, slots        incremental checksums + multi-slot verified recovery
 """
 
+from .backends import (
+    BACKENDS,
+    MemoryBackend,
+    ReferenceLRUBackend,
+    VectorizedBackend,
+    make_backend,
+)
 from .nvm import CrashEmulator, NVMConfig, NVMStore, TrafficStats, VolatileCache
 from .regions import PersistentRegion
 from .invariants import (
@@ -30,6 +39,8 @@ from .checkpoint_baseline import CheckpointBaseline
 
 __all__ = [
     "CrashEmulator", "NVMConfig", "NVMStore", "TrafficStats", "VolatileCache",
+    "MemoryBackend", "ReferenceLRUBackend", "VectorizedBackend",
+    "BACKENDS", "make_backend",
     "PersistentRegion",
     "ChecksumInvariant", "InvariantSet", "OrthogonalityInvariant",
     "ResidualInvariant", "ScalarChecksumInvariant",

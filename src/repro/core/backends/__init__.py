@@ -1,0 +1,38 @@
+"""Pluggable NVM cache-emulation backends.
+
+``MemoryBackend`` (base.py) is the narrow protocol; two implementations
+ship here:
+
+* ``reference`` — :class:`ReferenceLRUBackend`, exact per-entry
+  OrderedDict semantics; the oracle.
+* ``vectorized`` — :class:`VectorizedBackend`, batched bitmap/stamp
+  arrays; the default, byte-equivalent to the oracle and ~10-100x
+  faster on range traffic.
+
+Select with ``NVMConfig(backend="...")`` or the ``REPRO_NVM_BACKEND``
+environment variable. See README.md in this directory.
+"""
+
+from __future__ import annotations
+
+from .base import MemoryBackend
+from .reference import ReferenceLRUBackend
+from .vectorized import VectorizedBackend
+
+__all__ = ["MemoryBackend", "ReferenceLRUBackend", "VectorizedBackend",
+           "BACKENDS", "make_backend"]
+
+BACKENDS = {
+    ReferenceLRUBackend.kind: ReferenceLRUBackend,
+    VectorizedBackend.kind: VectorizedBackend,
+}
+
+
+def make_backend(kind: str, store, cfg) -> MemoryBackend:
+    try:
+        cls = BACKENDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown NVM backend {kind!r}; available: {sorted(BACKENDS)}"
+        ) from None
+    return cls(store, cfg)

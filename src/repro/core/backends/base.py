@@ -1,0 +1,114 @@
+"""The narrow protocol every NVM-cache emulation backend implements.
+
+A backend models *which bytes of each registered region would still be
+sitting dirty in a volatile CPU cache* — i.e. which bytes have NOT yet
+reached the NVM image held by :class:`repro.core.nvm.NVMStore`. The
+program's latest values always live in the registered truth arrays;
+backends only track occupancy/dirtiness metadata and copy truth spans
+into the store's image on writeback.
+
+Granularity: an *entry* covers ``sector_lines`` consecutive cache lines
+of a region's flattened buffer (``sector_lines=1`` is exact per-line
+tracking). Entries are weighted by their line count against the cache
+capacity, so coarse sectors keep emulation cheap without losing the
+capacity pressure that drives eviction behavior.
+
+Cost-model invariants (every backend MUST uphold these so that modeled
+mechanism overheads are backend-independent — see the paper §II/§III.A
+and backends/README.md):
+
+* evicting a dirty entry persists its clipped byte span at NVM write
+  bandwidth and bumps ``lines_evicted`` by the entry's line weight,
+  dirty or clean;
+* a read miss charges one full entry (``elems_per_entry * itemsize``)
+  at NVM read bandwidth;
+* ``flush`` charges the CLFLUSH issue latency for every line in the
+  range unconditionally (flushing clean or absent lines costs the same
+  order as dirty ones), writes back dirty entries, and charges clean or
+  absent entries one entry's bytes of write-pipeline occupancy;
+* ``drain`` is a full eviction sweep: writebacks are charged and
+  ``lines_evicted`` counts every drained entry;
+* ``crash`` is free: volatile contents simply vanish;
+* all charges for one program-visible operation are aggregated and
+  applied through :meth:`TrafficStats.charge_batch` exactly once, so
+  two backends replaying the same trace produce *identical* stats.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = ["MemoryBackend", "OpAccumulator"]
+
+
+class OpAccumulator:
+    """Per-operation charge accumulator (integers only).
+
+    Backends fill one of these per program-visible operation and apply
+    it through ``TrafficStats.charge_batch`` exactly once — keeping the
+    charge arithmetic (and so the float ``modeled_seconds``) identical
+    across backends.
+    """
+
+    __slots__ = ("wb_bytes", "evict_lines", "read_entries")
+
+    def __init__(self):
+        self.wb_bytes = 0
+        self.evict_lines = 0
+        self.read_entries = 0
+
+
+@runtime_checkable
+class MemoryBackend(Protocol):
+    """Volatile-cache-over-NVM emulation strategy.
+
+    Constructed as ``Backend(store, cfg)`` where ``store`` is the
+    :class:`~repro.core.nvm.NVMStore` holding the persistent image and
+    traffic stats, and ``cfg`` the :class:`~repro.core.nvm.NVMConfig`.
+    """
+
+    # -- region lifecycle --------------------------------------------------
+    def register(self, name: str, truth_flat: np.ndarray,
+                 sector_lines: int = 1) -> None:
+        """Start tracking ``name``; ``truth_flat`` is the program-truth
+        buffer whose spans will be persisted on writeback."""
+        ...
+
+    def unregister(self, name: str) -> None:
+        """Drop all state for ``name`` without writing anything back."""
+        ...
+
+    # -- program-visible operations ---------------------------------------
+    def write(self, name: str, lo: int, hi: int) -> None:
+        """Program stored truth[lo:hi): allocate entries, mark dirty."""
+        ...
+
+    def read(self, name: str, lo: int, hi: int) -> None:
+        """Program loaded truth[lo:hi): allocate entries (miss charges an
+        NVM read), do not dirty."""
+        ...
+
+    def flush(self, name: str, lo: int = 0, hi=None) -> None:
+        """CLFLUSH truth[lo:hi): write back dirty entries, invalidate."""
+        ...
+
+    def drain(self) -> None:
+        """Write back everything (normal program termination)."""
+        ...
+
+    def crash(self) -> int:
+        """Power loss: volatile contents vanish. Returns #dirty entries
+        lost."""
+        ...
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def occupancy_lines(self) -> int:
+        """Line-weighted cache occupancy."""
+        ...
+
+    def dirty_entries(self, name: str) -> np.ndarray:
+        """Sorted entry indices of ``name`` currently dirty in cache."""
+        ...

@@ -45,10 +45,10 @@ class CheckpointBaseline:
                 stats.modeled_seconds += nbytes / cfg.hdd_bw
             elif self.target == "nvm_only":
                 # CPU-cache flush of the data object + copy into NVM area
-                self._emu.cache.flush(r.name)
+                self._emu.flush(r.name)
                 stats.charge_write(nbytes, cfg)
             else:  # nvm_dram: flush CPU caches AND copy through DRAM cache
-                self._emu.cache.flush(r.name)
+                self._emu.flush(r.name)
                 stats.charge_write(nbytes, cfg)
             self._area[r.name] = data
         if self.target == "nvm_dram":

@@ -11,28 +11,38 @@ can be charged in modeled seconds independent of host speed.
 Three layers:
 
   NVMStore        persistent image (survives ``crash()``) + traffic stats
-  VolatileCache   fully-associative LRU write-back cache over the store
-  CrashEmulator   couples program "truth" arrays with cache+store; provides
-                  ``crash()`` / ``recover()`` and region allocation
+  MemoryBackend   volatile write-back cache emulation over the store —
+                  pluggable (repro.core.backends): an exact per-entry
+                  ``reference`` oracle and a batched ``vectorized``
+                  default with identical semantics
+  CrashEmulator   couples program "truth" arrays with backend+store;
+                  provides ``crash()`` / ``recover()``, region
+                  allocation, and the program-visible read/write/flush
+                  facade consumers go through
 
 Granularity: a *line* is ``line_bytes`` of a region's flattened buffer.
-Program views ("truth") always hold the latest values — the cache tracks
-*which lines would still be dirty in a volatile cache*, i.e. which bytes
-have NOT yet reached NVM. ``crash()`` discards exactly those bytes.
+Program views ("truth") always hold the latest values — the backend
+tracks *which lines would still be dirty in a volatile cache*, i.e.
+which bytes have NOT yet reached NVM. ``crash()`` discards exactly
+those bytes.
 
 Cost model notes (paper §II): flushing a clean or absent line costs the
 same order as flushing a dirty one, so ``flush`` charges per-line cost
 unconditionally. CLFLUSH also invalidates, so flushed lines leave the
-cache.
+cache. The full set of cost-model invariants backends must uphold is
+documented in backends/base.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Dict, Iterator, Optional, Tuple
+import os
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from .backends import make_backend
+from .backends.reference import ReferenceLRUBackend
 
 __all__ = [
     "NVMConfig",
@@ -42,10 +52,18 @@ __all__ = [
     "CrashEmulator",
 ]
 
+# Back-compat alias: the pre-backend cache class lives on as the
+# reference backend (same semantics, entry-at-a-time OrderedDict).
+VolatileCache = ReferenceLRUBackend
+
+
+def _default_backend() -> str:
+    return os.environ.get("REPRO_NVM_BACKEND", "vectorized")
+
 
 @dataclasses.dataclass(frozen=True)
 class NVMConfig:
-    """Cache geometry + bandwidth cost model.
+    """Cache geometry + bandwidth cost model + backend selection.
 
     Defaults mirror the paper's setup: 32 MB cache (their DRAM cache size;
     we use it as the volatile-cache capacity for crash experiments can be
@@ -68,6 +86,9 @@ class NVMConfig:
     # real set-associative cache inflicts on *hot* lines, which is what
     # leaves XSBench's counters stale-by-different-amounts in NVM (Fig. 10).
     replacement: str = "lru"
+    # emulation backend: "vectorized" (default) or "reference" (oracle);
+    # overridable via the REPRO_NVM_BACKEND environment variable.
+    backend: str = dataclasses.field(default_factory=_default_backend)
 
     @property
     def read_bw(self) -> float:
@@ -100,6 +121,27 @@ class TrafficStats:
         self.lines_flushed += nlines
         self.modeled_seconds += nlines * cfg.flush_latency
 
+    def charge_batch(self, cfg: NVMConfig, *, write_bytes: int = 0,
+                     read_bytes: int = 0, flush_lines: int = 0,
+                     clean_flush_bytes: int = 0, evict_lines: int = 0) -> None:
+        """Apply one program-visible operation's aggregated charges.
+
+        Backends accumulate integer byte/line counts per operation and
+        charge exactly once through here, in this fixed order — which is
+        what makes TrafficStats (including the float ``modeled_seconds``)
+        bit-identical across backends for identical traces.
+        """
+        if write_bytes:
+            self.charge_write(write_bytes, cfg)
+        if read_bytes:
+            self.charge_read(read_bytes, cfg)
+        if flush_lines:
+            self.charge_flush_issue(flush_lines, cfg)
+        if clean_flush_bytes:
+            # clean/absent flushes still occupy the memory pipeline
+            self.modeled_seconds += clean_flush_bytes / cfg.write_bw
+        self.lines_evicted += evict_lines
+
     def snapshot(self) -> "TrafficStats":
         return dataclasses.replace(self)
 
@@ -117,7 +159,9 @@ class NVMStore:
     """The persistent image: named flat byte-addressable regions.
 
     ``image[name]`` is the array of bytes that would survive a crash.
-    All writes into the image are charged to ``stats`` at NVM bandwidth.
+    Backends copy truth spans in via :meth:`persist` (uncharged — the
+    backend aggregates and charges traffic per operation, see
+    ``TrafficStats.charge_batch``).
     """
 
     def __init__(self, cfg: NVMConfig):
@@ -137,10 +181,9 @@ class NVMStore:
         self.image.pop(name, None)
         self.meta.pop(name, None)
 
-    def writeback(self, name: str, lo: int, hi: int, src: np.ndarray) -> None:
-        """Persist src[lo:hi) (flat element indices) into the image."""
+    def persist(self, name: str, lo: int, hi: int, src: np.ndarray) -> None:
+        """Copy src[lo:hi) (flat element indices) into the image."""
         self.image[name][lo:hi] = src[lo:hi]
-        self.stats.charge_write((hi - lo) * src.itemsize, self.cfg)
 
     def read_view(self, name: str) -> np.ndarray:
         """The surviving (post-crash) contents, shaped. No cost charged:
@@ -149,172 +192,29 @@ class NVMStore:
         return self.image[name].reshape(shape)
 
 
-class VolatileCache:
-    """Fully-associative LRU write-back cache.
-
-    Keys are ``(region, entry_index)`` where an *entry* covers
-    ``sector_lines`` consecutive cache lines of that region (sector_lines=1
-    reproduces exact per-line behavior; large read-mostly regions register
-    with coarser sectors so emulation stays fast while capacity pressure —
-    the thing that drives the paper's eviction behavior — is preserved:
-    entries are *weighted* by their line count against the capacity).
-
-    Only occupancy and dirtiness are tracked — the newest data lives in
-    the emulator's truth arrays; the store's image holds whatever has been
-    written back.
-    """
-
-    def __init__(self, store: NVMStore, cfg: NVMConfig):
-        self.store = store
-        self.cfg = cfg
-        self.capacity_lines = max(1, cfg.cache_bytes // cfg.line_bytes)
-        # value = dirty flag; weight per entry is a per-region constant
-        self._lru: "OrderedDict[Tuple[str, int], bool]" = OrderedDict()
-        self._weight_used = 0
-        self._truth: Dict[str, np.ndarray] = {}
-        self._sector_lines: Dict[str, int] = {}
-
-    # -- registration ------------------------------------------------------
-    def register(self, name: str, truth_flat: np.ndarray, sector_lines: int = 1) -> None:
-        self._truth[name] = truth_flat
-        self._sector_lines[name] = max(1, int(sector_lines))
-
-    def unregister(self, name: str) -> None:
-        self._truth.pop(name, None)
-        stale = [k for k in self._lru if k[0] == name]
-        w = self._sector_lines.get(name, 1)
-        for k in stale:
-            del self._lru[k]
-            self._weight_used -= w
-        self._sector_lines.pop(name, None)
-
-    # -- geometry ----------------------------------------------------------
-    def _elems_per_entry(self, name: str) -> int:
-        epl = max(1, self.cfg.line_bytes // self._truth[name].itemsize)
-        return epl * self._sector_lines[name]
-
-    def _entry_range(self, name: str, lo: int, hi: int) -> range:
-        epe = self._elems_per_entry(name)
-        return range(lo // epe, (hi - 1) // epe + 1) if hi > lo else range(0)
-
-    # -- internals ----------------------------------------------------------
-    def _evict_one(self) -> None:
-        (name, entry), dirty = self._lru.popitem(last=False)
-        self._weight_used -= self._sector_lines[name]
-        if dirty:
-            self._writeback_entry(name, entry)
-        self.store.stats.lines_evicted += self._sector_lines[name]
-
-    def _writeback_entry(self, name: str, entry: int) -> None:
-        truth = self._truth[name]
-        epe = self._elems_per_entry(name)
-        lo = entry * epe
-        hi = min(lo + epe, truth.shape[0])
-        if hi > lo:
-            self.store.writeback(name, lo, hi, truth)
-
-    def _touch(self, name: str, entry: int, dirty: bool) -> None:
-        key = (name, entry)
-        if self.cfg.replacement == "fifo":
-            # FIFO: hits update dirtiness in place (no reordering), so hot
-            # lines age out periodically like victims of set conflicts
-            prev = self._lru.get(key)
-            if prev is not None:
-                if dirty and not prev:
-                    self._lru[key] = True
-                return
-            w = self._sector_lines[name]
-            while self._weight_used + w > self.capacity_lines and self._lru:
-                self._evict_one()
-            self._weight_used += w
-            self._lru[key] = dirty
-            return
-        prev = self._lru.pop(key, None)
-        if prev is None:
-            w = self._sector_lines[name]
-            while self._weight_used + w > self.capacity_lines and self._lru:
-                self._evict_one()
-            self._weight_used += w
-        self._lru[key] = dirty or bool(prev)
-
-    # -- program-visible operations ------------------------------------------
-    def write(self, name: str, lo: int, hi: int) -> None:
-        """Program stored truth[lo:hi): allocate entries, mark dirty."""
-        for entry in self._entry_range(name, lo, hi):
-            self._touch(name, entry, dirty=True)
-
-    def read(self, name: str, lo: int, hi: int) -> None:
-        """Program loaded truth[lo:hi): allocate entries (miss => charge
-        NVM read), do not dirty."""
-        itemsize = self._truth[name].itemsize
-        epe = self._elems_per_entry(name)
-        for entry in self._entry_range(name, lo, hi):
-            if (name, entry) not in self._lru:
-                self.store.stats.charge_read(epe * itemsize, self.cfg)
-            self._touch(name, entry, dirty=False)
-
-    def flush(self, name: str, lo: int = 0, hi: Optional[int] = None) -> None:
-        """CLFLUSH truth[lo:hi): write back dirty entries, invalidate,
-        charge per-line cost unconditionally (paper §II: flushing clean or
-        absent lines costs the same order as dirty ones)."""
-        if hi is None:
-            hi = self._truth[name].shape[0]
-        entries = self._entry_range(name, lo, hi)
-        sector = self._sector_lines[name]
-        self.store.stats.charge_flush_issue(len(entries) * sector, self.cfg)
-        itemsize = self._truth[name].itemsize
-        epe = self._elems_per_entry(name)
-        for entry in entries:
-            key = (name, entry)
-            dirty = self._lru.pop(key, None)
-            if dirty is not None:
-                self._weight_used -= sector
-            if dirty:
-                self._writeback_entry(name, entry)
-            else:
-                # clean/absent flush still occupies the memory pipeline
-                self.store.stats.modeled_seconds += (
-                    epe * itemsize / self.store.cfg.write_bw
-                )
-
-    def drain(self) -> None:
-        """Write back everything (normal program termination)."""
-        while self._lru:
-            (name, entry), dirty = self._lru.popitem(last=False)
-            self._weight_used -= self._sector_lines[name]
-            if dirty:
-                self._writeback_entry(name, entry)
-
-    def crash(self) -> int:
-        """Power loss: volatile contents vanish. Returns #dirty entries lost."""
-        lost = sum(1 for d in self._lru.values() if d)
-        self._lru.clear()
-        self._weight_used = 0
-        return lost
-
-    @property
-    def occupancy_lines(self) -> int:
-        return self._weight_used
-
-    def dirty_entries(self, name: str) -> Iterator[int]:
-        for (n, entry), dirty in self._lru.items():
-            if n == name and dirty:
-                yield entry
-
-
 class CrashEmulator:
-    """Couples program arrays with the cache+NVM pair (paper's crash
+    """Couples program arrays with the backend+NVM pair (paper's crash
     emulator). Allocate regions, compute on their ``.view`` arrays through
     :class:`PersistentRegion` (see regions.py), then ``crash()`` to lose
     volatile state and ``post_crash_view()`` to inspect what survived.
+
+    This is a thin facade: cache semantics live in the selected
+    :class:`~repro.core.backends.MemoryBackend`
+    (``cfg.backend`` — "vectorized" by default, "reference" for oracle
+    runs).
     """
 
     def __init__(self, cfg: Optional[NVMConfig] = None):
         self.cfg = cfg or NVMConfig()
         self.store = NVMStore(self.cfg)
-        self.cache = VolatileCache(self.store, self.cfg)
+        self.backend = make_backend(self.cfg.backend, self.store, self.cfg)
         self._truth: Dict[str, np.ndarray] = {}
         self.crashed = False
+
+    # back-compat: the pre-backend attribute name for the cache layer
+    @property
+    def cache(self):
+        return self.backend
 
     # region management ------------------------------------------------------
     def alloc(self, name: str, shape, dtype=np.float64,
@@ -325,22 +225,39 @@ class CrashEmulator:
         self.store.alloc(name, shape, dtype)
         truth = np.zeros(int(np.prod(shape)), dtype=np.dtype(dtype))
         self._truth[name] = truth
-        self.cache.register(name, truth, sector_lines=sector_lines)
+        self.backend.register(name, truth, sector_lines=sector_lines)
         region = PersistentRegion(self, name, shape, np.dtype(dtype))
         if init is not None:
             region[...] = np.asarray(init, dtype=dtype).reshape(shape)
         return region
 
     def free(self, name: str) -> None:
-        self.cache.unregister(name)
+        self.backend.unregister(name)
         self.store.free(name)
         self._truth.pop(name, None)
+
+    # program-visible operations (facade over the backend) --------------------
+    def write(self, name: str, lo: int, hi: int) -> None:
+        """Program stored truth[lo:hi) of ``name``."""
+        self.backend.write(name, lo, hi)
+
+    def read(self, name: str, lo: int, hi: int) -> None:
+        """Program loaded truth[lo:hi) of ``name``."""
+        self.backend.read(name, lo, hi)
+
+    def flush(self, name: str, lo: int = 0, hi: Optional[int] = None) -> None:
+        """CLFLUSH the lines covering truth[lo:hi) of ``name``."""
+        self.backend.flush(name, lo, hi)
+
+    def drain(self) -> None:
+        """Write back everything (normal program termination)."""
+        self.backend.drain()
 
     # crash / recovery ---------------------------------------------------------
     def crash(self) -> int:
         """Drop the volatile cache; reload every truth array from the NVM
         image (the program must now see only what survived)."""
-        lost = self.cache.crash()
+        lost = self.backend.crash()
         for name, truth in self._truth.items():
             truth[:] = self.store.image[name]
         self.crashed = True

@@ -25,18 +25,13 @@ def _flat_span(shape: Tuple[int, ...], index) -> Tuple[int, int]:
         return 0, int(np.prod(shape))
     if not isinstance(index, tuple):
         index = (index,)
-    lo, hi = 0, 1
-    stride = int(np.prod(shape))
-    dims_consumed = 0
     lo = 0
-    span = stride
+    span = int(np.prod(shape))
     for ax, idx in enumerate(index):
         extent = shape[ax]
         span //= extent
         if isinstance(idx, (int, np.integer)):
-            i = int(idx) % extent
-            lo += i * span
-            dims_consumed += 1
+            lo += (int(idx) % extent) * span
         elif isinstance(idx, slice):
             start, stop, step = idx.indices(extent)
             if step != 1:
@@ -81,13 +76,13 @@ class PersistentRegion:
     # -- array protocol ----------------------------------------------------------
     def __getitem__(self, index) -> np.ndarray:
         lo, hi = _flat_span(self.shape, index)
-        self._emu.cache.read(self.name, lo, hi)
+        self._emu.read(self.name, lo, hi)
         return self.view[index]
 
     def __setitem__(self, index, value) -> None:
         lo, hi = _flat_span(self.shape, index)
         self.view[index] = value
-        self._emu.cache.write(self.name, lo, hi)
+        self._emu.write(self.name, lo, hi)
 
     def __array__(self, dtype=None):
         out = self.__getitem__(Ellipsis)
@@ -97,7 +92,7 @@ class PersistentRegion:
     def flush(self, index=Ellipsis) -> None:
         """CLFLUSH the lines covering ``index``."""
         lo, hi = _flat_span(self.shape, index)
-        self._emu.cache.flush(self.name, lo, hi)
+        self._emu.flush(self.name, lo, hi)
 
     def nbytes_span(self, index=Ellipsis) -> int:
         lo, hi = _flat_span(self.shape, index)

@@ -61,7 +61,7 @@ class UndoLogTx:
     def commit(self) -> None:
         """Flush every region touched in the tx, then drop the log."""
         for name, lo, hi, _old in self._log:
-            self._emu.cache.flush(name, lo, hi)
+            self._emu.flush(name, lo, hi)
         self._log.clear()
         self.committed = True
 

@@ -11,9 +11,19 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_mesh", "single_device_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "single_device_mesh", "axis_type_kwargs"]
+
+# jax >= 0.5 exposes jax.sharding.AxisType and expects axis_types=;
+# 0.4.x has neither, and jax.make_mesh rejects the kwarg there.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types=`` kwargs for ``jax.make_mesh``, or ``{}`` on jax 0.4.x."""
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,13 +31,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_type_kwargs(len(axes)))
 
 
 def single_device_mesh(axes: Tuple[str, ...] = ("data", "model")):

@@ -1,0 +1,17 @@
+"""Shared test setup.
+
+* Makes ``src/`` importable so a bare ``pytest`` works without
+  PYTHONPATH gymnastics.
+* Installs the deterministic hypothesis stand-in when the real
+  ``hypothesis`` package is not installed in the image (the property
+  tests only use a small strategy subset — see repro._compat).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro._compat.hypothesis_shim import install as _install_hypothesis_shim
+
+_install_hypothesis_shim()

@@ -1,10 +1,21 @@
-"""Unit + property tests for the NVM crash emulator (core/nvm.py)."""
+"""Unit + property tests for the NVM crash emulator (core/nvm.py).
+
+Every test in this module runs twice — once per emulation backend
+(reference oracle / vectorized default) — via the autouse fixture below.
+"""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nvm import CrashEmulator, NVMConfig
+
+
+@pytest.fixture(params=["reference", "vectorized"], autouse=True)
+def nvm_backend(request, monkeypatch):
+    """NVMConfig picks its default backend up from the environment."""
+    monkeypatch.setenv("REPRO_NVM_BACKEND", request.param)
+    return request.param
 
 
 def small_emu(cache_bytes=256, replacement="lru"):

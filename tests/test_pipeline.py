@@ -8,8 +8,8 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
+from repro.launch.mesh import make_mesh
 from repro.sharding.pipeline import pipeline_apply, stage_params
 
 
@@ -32,7 +32,7 @@ def test_single_stage_identity():
     rng = np.random.default_rng(0)
     W = jnp.asarray(rng.normal(size=(L, D, D)) * 0.3, jnp.float32)
     x = jnp.asarray(rng.normal(size=(n_micro, mb, D)), jnp.float32)
-    mesh = jax.make_mesh((1,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((1,), ("stage",))
     out = pipeline_apply(_stage_fn, stage_params(W, 1), x, mesh)
     ref = jax.vmap(lambda xx: _sequential(W, xx))(x)
     assert float(jnp.max(jnp.abs(out - ref))) == 0.0
@@ -53,7 +53,7 @@ def test_four_stage_matches_sequential_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
         from repro.sharding.pipeline import pipeline_apply, stage_params
         L, D, n_micro, mb = 8, 16, 6, 2
         rng = np.random.default_rng(0)
@@ -66,7 +66,7 @@ def test_four_stage_matches_sequential_subprocess():
         def seq(xx):
             h, _ = jax.lax.scan(lambda h, w: (layer(w, h), None), xx, W)
             return h
-        mesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+        mesh = make_mesh((4,), ("stage",))
         out = pipeline_apply(stage_fn, stage_params(W, 4), x, mesh)
         ref = jax.vmap(seq)(x)
         assert float(jnp.max(jnp.abs(out - ref))) == 0.0, "mismatch"
