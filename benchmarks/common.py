@@ -11,7 +11,6 @@ Quartz-style — paper §III.A). Recomputation/correctness figures
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import time
 from typing import Callable, Dict, List, Optional
@@ -29,13 +28,24 @@ class Row:
         return f"{self.name},{self.value:.6g},{self.derived}"
 
 
+def write_json(path: str, payload) -> None:
+    """Shared machine-readable artifact writer (suite artifacts, the
+    ``--json`` combined output, and the scenario sweep all use the same
+    underlying writer — repro.scenarios.driver.dump_json)."""
+    from repro.scenarios.driver import dump_json
+
+    dump_json(path, payload)
+
+
+def rows_to_records(rows: List[Row]) -> List[Dict]:
+    return [dataclasses.asdict(r) for r in rows]
+
+
 def emit(rows: List[Row], save_as: Optional[str] = None) -> None:
     for r in rows:
         print(r.csv(), flush=True)
     if save_as:
-        os.makedirs(ART, exist_ok=True)
-        with open(os.path.join(ART, save_as), "w") as fh:
-            json.dump([dataclasses.asdict(r) for r in rows], fh, indent=1)
+        write_json(os.path.join(ART, save_as), rows_to_records(rows))
 
 
 def timeit(fn: Callable, repeats: int = 3) -> float:

@@ -1,9 +1,11 @@
 """Paper Figs. 10 + 12: XSBench result correctness after crash+restart.
 
-Three runs on identical counter-based random inputs:
-  no crash                       -> ground truth counts
-  basic restart (index flush)    -> loses counts (Fig. 10's failure)
-  selective flush (Fig. 11)      -> bitwise-identical counts (Fig. 12)
+Three scenario cells on identical counter-based random inputs (the flush
+*policy* — the algorithm-directed part — is a workload parameter):
+
+  no crash, selective            -> ground truth counts
+  crash, basic restart (index)   -> loses counts (Fig. 10's failure)
+  crash, selective flush (Fig.11)-> bitwise-identical counts (Fig. 12)
 """
 
 from __future__ import annotations
@@ -12,43 +14,53 @@ from typing import List
 
 import numpy as np
 
-from repro.algorithms.xsbench import ADCC_XSBench, XSBenchConfig
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 from .common import Row, emit
 
-CFG = XSBenchConfig(lookups=60_000, grid_points=20_000)
-NVM = NVMConfig(cache_bytes=2 * 1024 * 1024, replacement="fifo")
+ARTIFACT = "fig10_12_mc_correctness.json"
+
+PARAMS = dict(lookups=60_000, grid_points=20_000, n_nuclides=34,
+              n_materials=12, max_nuclides_per_material=8,
+              flush_every_frac=1e-4, seed=7)
 CRASH_AT = 6_000   # 10% of lookups, as in the paper
 
 
 def run() -> List[Row]:
-    rows = []
-    ok = ADCC_XSBench(CFG, NVM, policy="selective").run()
-    basic = ADCC_XSBench(CFG, NVM, policy="basic").run(crash_at=CRASH_AT)
-    sel = ADCC_XSBench(CFG, NVM, policy="selective").run(crash_at=CRASH_AT)
+    cfg = NVMConfig(cache_bytes=2 * 1024 * 1024, replacement="fifo")
+    crash = CrashPlan.at_step(CRASH_AT - 1)
+    ok = run_scenario(("xsbench", {**PARAMS, "policy": "selective"}),
+                      "adcc", CrashPlan.no_crash(), cfg=cfg)
+    basic = run_scenario(("xsbench", {**PARAMS, "policy": "basic"}),
+                         "adcc", crash, cfg=cfg)
+    sel = run_scenario(("xsbench", {**PARAMS, "policy": "selective"}),
+                       "adcc", crash, cfg=cfg)
 
+    rows = []
     for t in range(5):
         rows.append(Row(f"fig10/type{t+1}/no_crash_pct",
-                        100 * ok.fractions[t]))
+                        100 * ok.info["fractions"][t]))
         rows.append(Row(f"fig10/type{t+1}/basic_restart_pct",
-                        100 * basic.fractions[t]))
+                        100 * basic.info["fractions"][t]))
         rows.append(Row(f"fig12/type{t+1}/selective_restart_pct",
-                        100 * sel.fractions[t]))
+                        100 * sel.info["fractions"][t]))
+    lookups = PARAMS["lookups"]
     rows.append(Row("fig10/basic_restart/counts_lost",
-                    CFG.lookups - int(basic.counts.sum()),
-                    f"iterations_lost={basic.iterations_lost}"))
+                    lookups - int(basic.info["counts"].sum()),
+                    f"iterations_lost={basic.steps_lost}"))
     rows.append(Row("fig12/selective_restart/exact_match",
-                    float(np.array_equal(sel.counts, ok.counts)),
+                    float(np.array_equal(sel.info["counts"],
+                                         ok.info["counts"])),
                     "counts bitwise-identical to no-crash run"))
     rows.append(Row("fig12/selective_restart/iterations_lost",
-                    sel.iterations_lost,
-                    f"bound={int(CFG.lookups*CFG.flush_every_frac)}"))
+                    sel.steps_lost,
+                    f"bound={int(lookups * PARAMS['flush_every_frac'])}"))
     return rows
 
 
 def main() -> None:
-    emit(run(), save_as="fig10_12_mc_correctness.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

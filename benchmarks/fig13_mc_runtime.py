@@ -5,7 +5,8 @@ The persisted objects are tiny (macro_xs_vector + 5 counters + index =
 NVM/DRAM checkpoint still pays a whole-DRAM-cache flush per checkpoint —
 the paper's 13% outlier; ADCC flushes ~13 lines: <=0.05% overhead.
 Runtime measured as wall-clock lookup loop (numpy, no emulator) with
-mechanism costs charged per flush interval.
+per-interval mechanism costs charged through the central cost model
+(``repro.scenarios.xsbench_step_profile`` + ``mechanism_cases()``).
 """
 
 from __future__ import annotations
@@ -15,9 +16,11 @@ from typing import List
 
 import numpy as np
 
-from repro.core.nvm import NVMConfig
+from repro.scenarios import mechanism_cases, xsbench_step_profile
 
 from .common import Row, emit
+
+ARTIFACT = "fig13_mc_runtime.json"
 
 LOOKUPS = 200_000
 # paper-matched ABSOLUTE interval: 0.01% of the paper's 1.5e7 lookups
@@ -26,7 +29,6 @@ LOOKUPS = 200_000
 FLUSH_EVERY = 1_500
 GRID = 40_000
 NUCLIDES = 34
-STATE_BYTES = (5 + 5 + 1) * 8          # macro_xs + counters + index
 
 
 def _native_lookup_seconds() -> float:
@@ -51,52 +53,23 @@ def _native_lookup_seconds() -> float:
     return time.perf_counter() - t0
 
 
-def _mech_total(case: str, cfg: NVMConfig) -> float:
-    n_flushes = LOOKUPS // FLUSH_EVERY
-    lines = max(1, STATE_BYTES // cfg.line_bytes) + 10  # distinct lines
-    if case == "native":
-        return 0.0
-    if case == "ckpt_hdd":
-        # per checkpoint: seek latency dominates tiny payloads
-        return n_flushes * (5e-3 + STATE_BYTES / cfg.hdd_bw)
-    if case == "ckpt_nvm_only":
-        return n_flushes * (STATE_BYTES / cfg.write_bw
-                            + lines * cfg.flush_latency)
-    if case == "ckpt_nvm_dram":
-        return n_flushes * (STATE_BYTES / cfg.write_bw
-                            + lines * cfg.flush_latency
-                            + cfg.dram_cache_bytes / cfg.dram_bw
-                            + cfg.dram_cache_bytes / cfg.write_bw)
-    if case == "pmem_undo":
-        # tx per interval: log old lines + commit fences
-        return n_flushes * 2 * (lines * 64 / cfg.write_bw
-                                + lines * cfg.flush_latency)
-    if case == "adcc":
-        return n_flushes * (lines * 64 / cfg.write_bw
-                            + lines * cfg.flush_latency)
-    raise ValueError(case)
-
-
 def run() -> List[Row]:
     native = _native_lookup_seconds()
     rows = [Row("fig13/mc_runtime/native_seconds", native,
                 f"{LOOKUPS} lookups")]
-    nvm_only = NVMConfig(nvm_same_as_dram=True)
-    nvm_dram = NVMConfig()
-    for case, cfg in [("native", nvm_only), ("ckpt_hdd", nvm_only),
-                      ("ckpt_nvm_only", nvm_only),
-                      ("ckpt_nvm_dram", nvm_dram), ("pmem_undo", nvm_only),
-                      ("adcc_nvm_only", nvm_only),
-                      ("adcc_nvm_dram", nvm_dram)]:
-        base = "adcc" if case.startswith("adcc") else case
-        mech = _mech_total(base, cfg)
-        rows.append(Row(f"fig13/mc_runtime/{case}/normalized",
+    n_flushes = LOOKUPS // FLUSH_EVERY
+    for case in mechanism_cases():
+        cfg = case.config()
+        profile = xsbench_step_profile(cfg.line_bytes,
+                                       interval_steps=FLUSH_EVERY)
+        mech = n_flushes * case.step_seconds(profile, cfg)
+        rows.append(Row(f"fig13/mc_runtime/{case.name}/normalized",
                         (native + mech) / native, f"mech={mech*1e3:.2f}ms"))
     return rows
 
 
 def main() -> None:
-    emit(run(), save_as="fig13_mc_runtime.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

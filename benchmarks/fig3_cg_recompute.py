@@ -1,37 +1,39 @@
 """Paper Fig. 3: CG recomputation cost vs input problem size.
 
-Crash at a fixed iteration; recomputation time (detect + resume),
-normalized by the average per-iteration time, and the number of
-iterations lost — small problems fit in cache and lose everything,
-large problems lose ~1 iteration.
+A declarative scenario matrix over the unified driver: ADCC strategy,
+crash at a fixed iteration, problem size swept. Reported: recomputation
+time (detect + resume) normalized by the average per-iteration time, and
+the number of iterations lost — small problems fit in cache and lose
+everything, large problems lose ~1 iteration.
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from repro.algorithms.cg import ADCC_CG, make_spd_system
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 from .common import Row, emit
+
+ARTIFACT = "fig3_cg_recompute.json"
 
 SIZES = [2048, 8192, 32768, 131072]   # paper: classes S, W, A, B/C
 ITERS = 16
 CRASH_AT = 14
-CACHE = NVMConfig(cache_bytes=2 * 1024 * 1024)
 
 
 def run() -> List[Row]:
+    cfg = NVMConfig(cache_bytes=2 * 1024 * 1024)
     rows = []
     for n in SIZES:
-        A, b = make_spd_system(n, nnz_per_row=8, seed=n)
-        cg = ADCC_CG(A, b, iters=ITERS, cfg=CACHE)
-        res = cg.run(crash_at_iter=CRASH_AT)
-        lost = res.iterations_lost
+        res = run_scenario(("cg", {"n": n, "iters": ITERS, "seed": n}),
+                           "adcc", CrashPlan.at_step(CRASH_AT), cfg=cfg)
         norm = ((res.detect_seconds + res.resume_seconds)
-                / max(res.avg_iter_seconds, 1e-12))
-        rows.append(Row(f"fig3/cg_recompute/n={n}/iters_lost", lost,
-                        f"restart_iter={res.restart_iter}"))
+                / max(res.avg_step_seconds, 1e-12))
+        rows.append(Row(f"fig3/cg_recompute/n={n}/iters_lost",
+                        res.steps_lost,
+                        f"restart_iter={res.restart_point}"))
         rows.append(Row(f"fig3/cg_recompute/n={n}/normalized_recompute",
                         norm,
                         f"detect={res.detect_seconds:.4f}s "
@@ -40,7 +42,7 @@ def run() -> List[Row]:
 
 
 def main() -> None:
-    emit(run(), save_as="fig3_cg_recompute.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

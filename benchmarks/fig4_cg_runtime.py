@@ -6,24 +6,23 @@ NVM-only, (4) checkpoint->NVM/DRAM, (5) PMEM undo-log transactions,
 frequency = every iteration (same recomputation budget as ADCC with a
 large problem — the paper's fair-comparison setup).
 
-Mechanism costs are charged through the bandwidth model; CG compute is
-measured wall-clock; reported value = normalized runtime vs native.
-PMEM logging is line-granular copy-before-write (every dirtied line is
-logged + fenced), which is what makes transactions expensive for
-HPC-style whole-array updates (paper: 4.3x on CG).
+The mechanism axis and its cost formulas come entirely from
+``repro.scenarios`` (`mechanism_cases()` + the per-workload
+`cg_step_profile`): this figure is just the declarative matrix
+``native_iter x 7 mechanisms``. CG compute is measured wall-clock;
+reported value = normalized runtime vs native.
 """
 
 from __future__ import annotations
 
-import time
 from typing import List
 
-import numpy as np
-
-from repro.algorithms.cg import _sym_matvec, make_spd_system, plain_cg
-from repro.core.nvm import NVMConfig
+from repro.algorithms.cg import make_spd_system, plain_cg
+from repro.scenarios import cg_step_profile, mechanism_cases
 
 from .common import Row, emit, timeit
+
+ARTIFACT = "fig4_cg_runtime.json"
 
 N = 131072
 ITERS = 12
@@ -35,62 +34,21 @@ def _native_iter_seconds(A, b) -> float:
     return t / ITERS
 
 
-def _mechanism_seconds_per_iter(case: str, n: int, cfg: NVMConfig) -> float:
-    """Modeled mechanism cost per CG iteration."""
-    vec_bytes = n * 8
-    line = cfg.line_bytes
-    if case == "native":
-        return 0.0
-    if case.startswith("ckpt"):
-        data = 4 * vec_bytes                       # p, q, r, z
-        if case == "ckpt_hdd":
-            return data / cfg.hdd_bw
-        t = data / cfg.write_bw                    # copy into NVM
-        t += (data / line) * cfg.flush_latency     # CLFLUSH the source
-        if case == "ckpt_nvm_dram":
-            t += cfg.dram_cache_bytes / cfg.dram_bw  # DRAM-cache flush
-            t += cfg.dram_cache_bytes / cfg.write_bw
-        return t
-    if case == "pmem_undo":
-        # per-iteration tx over p, r, z: log old value of every dirtied
-        # line (copy + fence), then commit-flush the new data
-        dirtied = 3 * vec_bytes
-        t = dirtied / cfg.write_bw                 # log writes
-        t += (dirtied / line) * cfg.flush_latency  # log fences
-        t += dirtied / cfg.write_bw                # commit writeback
-        t += (dirtied / line) * cfg.flush_latency  # commit fences
-        return t
-    if case == "adcc":
-        return line / cfg.write_bw + cfg.flush_latency  # one cache line
-    raise ValueError(case)
-
-
 def run() -> List[Row]:
     A, b = make_spd_system(N, nnz_per_row=NNZ, seed=0)
     iter_s = _native_iter_seconds(A, b)
-    nvm_only = NVMConfig(nvm_same_as_dram=True)
-    nvm_dram = NVMConfig()
-    cases = [
-        ("native", nvm_only), ("ckpt_hdd", nvm_only),
-        ("ckpt_nvm_only", nvm_only), ("ckpt_nvm_dram", nvm_dram),
-        ("pmem_undo", nvm_only), ("adcc_nvm_only", nvm_only),
-        ("adcc_nvm_dram", nvm_dram),
-    ]
     rows = [Row("fig4/cg_runtime/native_iter_seconds", iter_s)]
-    for case, cfg in cases:
-        mech = _mechanism_seconds_per_iter(
-            case.replace("_nvm_only", "").replace("_nvm_dram", "")
-            if case.startswith(("adcc", "ckpt_nvm")) else case,
-            N, cfg) if case != "ckpt_nvm_dram" else \
-            _mechanism_seconds_per_iter("ckpt_nvm_dram", N, cfg)
-        normalized = (iter_s + mech) / iter_s
-        rows.append(Row(f"fig4/cg_runtime/{case}/normalized", normalized,
+    for case in mechanism_cases():
+        cfg = case.config()
+        mech = case.step_seconds(cg_step_profile(N, cfg.line_bytes), cfg)
+        rows.append(Row(f"fig4/cg_runtime/{case.name}/normalized",
+                        (iter_s + mech) / iter_s,
                         f"mech={mech*1e3:.3f}ms"))
     return rows
 
 
 def main() -> None:
-    emit(run(), save_as="fig4_cg_runtime.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

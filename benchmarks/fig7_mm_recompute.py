@@ -1,39 +1,38 @@
 """Paper Fig. 7: ABFT-MM recomputation cost for crashes in loop 1
 (submatrix multiplication) and loop 2 (submatrix addition), across
-matrix sizes. Expect: large matrices lose <= 1 chunk/row-block."""
+matrix sizes — a declarative scenario matrix (ADCC strategy ×
+per-phase crash plans). Expect: large matrices lose <= 1 chunk/row-block."""
 
 from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
-from repro.algorithms.mm_abft import ABFTMatmul
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 from .common import Row, emit
 
+ARTIFACT = "fig7_mm_recompute.json"
+
 SIZES = [256, 512, 768, 1024]
-CACHE = NVMConfig(cache_bytes=4 * 1024 * 1024)
+CRASH_INDEX = 2
 
 
 def run() -> List[Row]:
+    cfg = NVMConfig(cache_bytes=4 * 1024 * 1024)
     rows = []
-    rng = np.random.default_rng(0)
     for n in SIZES:
-        k = n // 4
-        A = rng.uniform(-1, 1, (n, n))
-        B = rng.uniform(-1, 1, (n, n))
-        for loop, it in [("loop1", 2), ("loop2", 2)]:
-            mm = ABFTMatmul(A, B, k, CACHE)
-            res = mm.run(crash_after=(loop, it))
-            assert res.max_error < 1e-9, (n, loop, res.max_error)
+        for loop in ("loop1", "loop2"):
+            res = run_scenario(("mm", {"n": n, "k": n // 4, "seed": n}),
+                               "adcc", CrashPlan.at_phase(loop, CRASH_INDEX),
+                               cfg=cfg)
+            assert res.correct, (n, loop, res.metrics)
             norm = ((res.detect_seconds + res.resume_seconds)
-                    / max(res.avg_chunk_seconds, 1e-12))
+                    / max(res.avg_step_seconds, 1e-12))
             rows.append(Row(f"fig7/mm_recompute/n={n}/{loop}/chunks_lost",
-                            res.chunks_lost,
-                            f"corrected={res.corrected_elements} "
-                            f"err={res.max_error:.1e}"))
+                            res.info["chunks_lost"],
+                            f"corrected={res.info['corrected_elements']} "
+                            f"err={res.metrics['max_error']:.1e}"))
             rows.append(Row(
                 f"fig7/mm_recompute/n={n}/{loop}/normalized_recompute",
                 norm, f"detect={res.detect_seconds:.4f}s"))
@@ -41,7 +40,7 @@ def run() -> List[Row]:
 
 
 def main() -> None:
-    emit(run(), save_as="fig7_mm_recompute.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

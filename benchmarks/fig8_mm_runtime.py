@@ -1,21 +1,24 @@
 """Paper Fig. 8: ABFT-MM runtime across mechanisms, for three rank sizes.
 
 Per rank k (paper: 200/400/1000 at n=8000; scaled here), mechanisms are
-charged per submatrix-multiplication iteration: checkpoint copies the
-whole C_f; PMEM logs every dirtied line of C_f; ADCC flushes only the
-checksum row + column. Larger rank => fewer flushes => smaller ADCC
-overhead (paper: 8.2% at rank 200 -> 1.3% at rank 1000)."""
+charged per submatrix-multiplication iteration through the central cost
+model (``repro.scenarios.mm_step_profile`` + ``mechanism_cases()``):
+checkpoint copies the whole C_f; PMEM logs every dirtied line of C_f;
+ADCC flushes only the checksum row + column. Larger rank => fewer
+flushes => smaller ADCC overhead (paper: 8.2% at rank 200 -> 1.3% at
+rank 1000)."""
 
 from __future__ import annotations
 
-import time
 from typing import List
 
 import numpy as np
 
-from repro.core.nvm import NVMConfig
+from repro.scenarios import mechanism_cases, mm_step_profile
 
 from .common import Row, emit, timeit
+
+ARTIFACT = "fig8_mm_runtime.json"
 
 N = 1024
 RANKS = [128, 256, 512]
@@ -28,52 +31,23 @@ def _native_chunk_seconds(n: int, k: int) -> float:
     return timeit(lambda: A @ B, repeats=3)
 
 
-def _mech_per_chunk(case: str, n: int, cfg: NVMConfig) -> float:
-    cf_bytes = (n + 1) * (n + 1) * 8
-    line = cfg.line_bytes
-    if case == "native":
-        return 0.0
-    if case == "ckpt_hdd":
-        return cf_bytes / cfg.hdd_bw
-    if case == "ckpt_nvm_only":
-        return cf_bytes / cfg.write_bw + (cf_bytes / line) * cfg.flush_latency
-    if case == "ckpt_nvm_dram":
-        return (cf_bytes / cfg.write_bw + (cf_bytes / line) * cfg.flush_latency
-                + cfg.dram_cache_bytes / cfg.dram_bw
-                + cfg.dram_cache_bytes / cfg.write_bw)
-    if case == "pmem_undo":
-        return 2 * (cf_bytes / cfg.write_bw
-                    + (cf_bytes / line) * cfg.flush_latency)
-    if case == "adcc":
-        cs_bytes = 2 * (n + 1) * 8      # checksum row + column
-        return cs_bytes / cfg.write_bw + (cs_bytes / line) * cfg.flush_latency
-    raise ValueError(case)
-
-
 def run() -> List[Row]:
     rows = []
-    nvm_only = NVMConfig(nvm_same_as_dram=True)
-    nvm_dram = NVMConfig()
     for k in RANKS:
         chunk_s = _native_chunk_seconds(N, k)
         rows.append(Row(f"fig8/mm_runtime/rank={k}/native_chunk_seconds",
                         chunk_s))
-        for case, cfg in [("native", nvm_only), ("ckpt_hdd", nvm_only),
-                          ("ckpt_nvm_only", nvm_only),
-                          ("ckpt_nvm_dram", nvm_dram),
-                          ("pmem_undo", nvm_only),
-                          ("adcc_nvm_only", nvm_only),
-                          ("adcc_nvm_dram", nvm_dram)]:
-            base = ("adcc" if case.startswith("adcc") else case)
-            mech = _mech_per_chunk(base, N, cfg)
-            rows.append(Row(f"fig8/mm_runtime/rank={k}/{case}/normalized",
+        for case in mechanism_cases():
+            cfg = case.config()
+            mech = case.step_seconds(mm_step_profile(N, cfg.line_bytes), cfg)
+            rows.append(Row(f"fig8/mm_runtime/rank={k}/{case.name}/normalized",
                             (chunk_s + mech) / chunk_s,
                             f"mech={mech*1e3:.3f}ms"))
     return rows
 
 
 def main() -> None:
-    emit(run(), save_as="fig8_mm_runtime.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

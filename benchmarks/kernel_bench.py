@@ -20,6 +20,8 @@ from repro.kernels.abft_matmul.ref import abft_matmul_ref
 
 from .common import Row, emit, timeit
 
+ARTIFACT = "kernel_bench.json"
+
 SIZES = [256, 512]
 
 
@@ -50,7 +52,7 @@ def run() -> List[Row]:
 
 
 def main() -> None:
-    emit(run(), save_as="kernel_bench.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

@@ -1,14 +1,24 @@
 """Benchmark driver: one module per paper table/figure + framework
-tables. Prints ``name,value,derived`` CSV. ``python -m benchmarks.run``.
+tables. Prints ``name,value,derived`` CSV; ``--json PATH`` additionally
+writes every suite's rows as one machine-readable artifact.
 
-  fig3   CG recomputation vs problem size          (paper Fig. 3)
-  fig4   CG runtime, 7 mechanisms                  (paper Fig. 4)
-  fig7   ABFT-MM recomputation, both loops         (paper Fig. 7)
-  fig8   ABFT-MM runtime vs rank, 7 mechanisms     (paper Fig. 8)
-  fig10  MC correctness basic vs selective restart (paper Figs. 10+12)
-  fig13  MC runtime, 7 mechanisms                  (paper Fig. 13)
-  train  training-loop ADCC vs sync checkpoint     (beyond-paper)
-  kernel ABFT matmul fused-checksum overhead       (kernel-level)
+    python -m benchmarks.run                      # every suite
+    python -m benchmarks.run fig4 fig8 fig13      # just these
+    python -m benchmarks.run --backend reference scenarios
+
+  fig3      CG recomputation vs problem size          (paper Fig. 3)
+  fig4      CG runtime, 7 mechanisms                  (paper Fig. 4)
+  fig7      ABFT-MM recomputation, both loops         (paper Fig. 7)
+  fig8      ABFT-MM runtime vs rank, 7 mechanisms     (paper Fig. 8)
+  fig10_12  MC correctness basic vs selective restart (paper Figs. 10+12)
+  fig13     MC runtime, 7 mechanisms                  (paper Fig. 13)
+  scenarios workload x strategy x crash-point sweep   (BENCH_scenarios.json)
+  train     training-loop ADCC vs sync checkpoint     (beyond-paper)
+  kernel    ABFT matmul fused-checksum overhead       (kernel-level)
+
+Suites construct their NVMConfigs lazily (inside ``run()``), so
+``--backend`` / ``REPRO_NVM_BACKEND`` can never be snapshotted at import
+time and silently ignored.
 
 Roofline (reads dry-run artifacts): ``python -m benchmarks.roofline``.
 """
@@ -20,46 +30,58 @@ import os
 import sys
 import time
 
-SUITE_NAMES = ("fig3", "fig4", "fig7", "fig8", "fig10_12", "fig13",
-               "train", "kernel")
+from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
+               fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
+               kernel_bench, scenarios_sweep, train_overhead)
+from .common import emit, rows_to_records, write_json
 
-
-def _load_suites():
-    """Import the suite modules. Deferred until after --backend is
-    applied: several suites build their NVMConfig at module import time,
-    which snapshots REPRO_NVM_BACKEND."""
-    from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
-                   fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
-                   kernel_bench, train_overhead)
-    return {
-        "fig3": fig3_cg_recompute,
-        "fig4": fig4_cg_runtime,
-        "fig7": fig7_mm_recompute,
-        "fig8": fig8_mm_runtime,
-        "fig10_12": fig10_12_mc_correctness,
-        "fig13": fig13_mc_runtime,
-        "train": train_overhead,
-        "kernel": kernel_bench,
-    }
+SUITES = {
+    "fig3": fig3_cg_recompute,
+    "fig4": fig4_cg_runtime,
+    "fig7": fig7_mm_recompute,
+    "fig8": fig8_mm_runtime,
+    "fig10_12": fig10_12_mc_correctness,
+    "fig13": fig13_mc_runtime,
+    "scenarios": scenarios_sweep,
+    "train": train_overhead,
+    "kernel": kernel_bench,
+}
+SUITE_NAMES = tuple(SUITES)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(SUITE_NAMES))
+    ap.add_argument("suites", nargs="*", metavar="SUITE",
+                    help=f"suites to run (default: all; one of {SUITE_NAMES})")
+    ap.add_argument("--only", default=None, choices=list(SUITE_NAMES),
+                    help="(legacy) run a single suite")
     ap.add_argument("--backend", default=None,
                     choices=["reference", "vectorized"],
                     help="NVM emulation backend for every suite "
                          "(default: NVMConfig's default, i.e. vectorized)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all executed suites' rows to PATH as JSON")
     args = ap.parse_args()
     if args.backend:
         os.environ["REPRO_NVM_BACKEND"] = args.backend
-    SUITES = _load_suites()
-    names = [args.only] if args.only else list(SUITES)
+    unknown = [s for s in args.suites if s not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from {SUITE_NAMES}")
+    names = list(args.suites) or ([args.only] if args.only
+                                  else list(SUITE_NAMES))
     print("name,value,derived")
     t0 = time.time()
+    by_suite = {}
     for name in names:
         print(f"# --- {name} ---", flush=True)
-        SUITES[name].main()
+        mod = SUITES[name]
+        rows = mod.run()
+        emit(rows, save_as=getattr(mod, "ARTIFACT", None))
+        by_suite[name] = rows_to_records(rows)
+    if args.json:
+        write_json(args.json, {"schema": "benchmarks.run/v1",
+                               "backend": args.backend or "default",
+                               "suites": by_suite})
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

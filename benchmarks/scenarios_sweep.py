@@ -1,0 +1,82 @@
+"""Scenario sweep: the full workloads × strategies × crash-points matrix
+through ``repro.scenarios.sweep()`` in one call, on the vectorized
+emulation backend. Emits one row per cell plus the machine-readable
+``BENCH_scenarios.json`` artifact (the EasyCrash-style systematic
+characterization of post-crash consistence).
+
+Default matrix: 3 workloads × 6 strategies × 4 crash points = 72 cells.
+``--smoke`` (or REPRO_SCENARIOS_SMOKE=1) shrinks it to the CI matrix:
+3 workloads × 3 strategies × 2 crash plans.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core.nvm import NVMConfig
+from repro.scenarios import DEFAULT_SWEEP_PLANS, CrashPlan, sweep
+
+from .common import ART, Row, emit
+
+ARTIFACT = "scenarios_sweep.json"
+BENCH_JSON = os.path.join(ART, "BENCH_scenarios.json")
+
+WORKLOADS = (
+    ("cg", {"n": 4096, "iters": 12}),
+    ("mm", {"n": 128, "k": 32}),
+    ("xsbench", {"lookups": 1500, "grid_points": 2000,
+                 "flush_every_frac": 0.01}),
+)
+STRATEGIES = ("none", "adcc", "undo_log", "checkpoint_hdd",
+              "checkpoint_nvm", "checkpoint_nvm_dram")
+PLANS = DEFAULT_SWEEP_PLANS
+
+SMOKE_WORKLOADS = (
+    ("cg", {"n": 1024, "iters": 8}),
+    ("mm", {"n": 64, "k": 16}),
+    ("xsbench", {"lookups": 400, "grid_points": 800,
+                 "flush_every_frac": 0.02}),
+)
+SMOKE_STRATEGIES = ("none", "adcc", "checkpoint_nvm")
+SMOKE_PLANS = (CrashPlan.no_crash(), CrashPlan.at_fraction(0.5))
+
+
+def run(smoke: bool = None) -> List[Row]:
+    if smoke is None:
+        smoke = bool(int(os.environ.get("REPRO_SCENARIOS_SMOKE", "0")))
+    workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
+    strategies = SMOKE_STRATEGIES if smoke else STRATEGIES
+    plans = SMOKE_PLANS if smoke else PLANS
+    cfg = NVMConfig(cache_bytes=1 * 1024 * 1024)
+    cells = sweep(workloads=workloads, strategies=strategies, plans=plans,
+                  cfg=cfg, out_json=BENCH_JSON)
+    rows = []
+    n_correct = 0
+    for c in cells:
+        cell = f"scenarios/{c.workload}/{c.strategy}/{c.plan}"
+        n_correct += int(c.correct)
+        rows.append(Row(f"{cell}/correct", float(c.correct),
+                        f"crash_step={c.crash_step}"))
+        rows.append(Row(f"{cell}/steps_lost", c.steps_lost,
+                        f"restart={c.restart_point}"))
+        rows.append(Row(f"{cell}/overhead_seconds", c.overhead_seconds,
+                        f"modeled_total={c.modeled_total_seconds:.3e}s"))
+    rows.append(Row("scenarios/summary/cells", len(cells),
+                    f"matrix={len(workloads)}x{len(strategies)}x{len(plans)}"))
+    rows.append(Row("scenarios/summary/correct_cells", n_correct,
+                    f"artifact={BENCH_JSON}"))
+    return rows
+
+
+def main() -> None:
+    emit(run(), save_as=ARTIFACT)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI matrix: 3 workloads x 3 strategies x 2 plans")
+    args = ap.parse_args()
+    emit(run(smoke=args.smoke or None), save_as=ARTIFACT)

@@ -28,6 +28,8 @@ from repro.models.registry import get_config
 
 from .common import Row, emit
 
+ARTIFACT = "train_overhead.json"
+
 STEPS = 24
 SLOT_EVERY = 8
 
@@ -65,7 +67,7 @@ def run() -> List[Row]:
 
 
 def main() -> None:
-    emit(run(), save_as="train_overhead.json")
+    emit(run(), save_as=ARTIFACT)
 
 
 if __name__ == "__main__":

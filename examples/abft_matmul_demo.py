@@ -12,22 +12,21 @@
 
 import numpy as np
 
-from repro.algorithms.mm_abft import ABFTMatmul
 from repro.core import abft
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 
 def crash_demo() -> None:
-    rng = np.random.default_rng(0)
     n, k = 512, 128
-    A = rng.uniform(-1, 1, (n, n))
-    B = rng.uniform(-1, 1, (n, n))
-    for loop, it in [("loop1", 2), ("loop2", 2)]:
-        mm = ABFTMatmul(A, B, k, NVMConfig(cache_bytes=2 * 1024 * 1024))
-        res = mm.run(crash_after=(loop, it))
-        print(f"== crash in {loop}: {res.chunks_lost} chunk(s) torn, "
-              f"{res.corrected_elements} element(s) checksum-corrected, "
-              f"final |C - A@B|_max = {res.max_error:.2e}")
+    for loop in ("loop1", "loop2"):
+        res = run_scenario(("mm", {"n": n, "k": k, "seed": 0}), "adcc",
+                           CrashPlan.at_phase(loop, 2),
+                           cfg=NVMConfig(cache_bytes=2 * 1024 * 1024))
+        print(f"== crash in {loop}: {res.info['chunks_lost']} chunk(s) torn, "
+              f"{res.info['corrected_elements']} element(s) "
+              f"checksum-corrected, "
+              f"final |C - A@B|_max = {res.metrics['max_error']:.2e}")
 
 
 def correction_demo() -> None:

@@ -1,37 +1,41 @@
-"""Paper §III.B end to end: CG with algorithm-directed crash consistence.
+"""Paper §III.B end to end: CG with algorithm-directed crash consistence,
+driven through the unified scenario API.
 
-Solves a sparse SPD system under the crash emulator, kills the run at
-iteration 14, then recovers by backward-scanning the NVM image with the
-two algorithm invariants (orthogonality p·q=0 and residual r=b-Az) and
-resumes — comparing the large-problem case (loses ~1 iteration) against
-the small-problem case (cache holds everything: restart from scratch).
+Each run is one scenario cell — CG workload × ADCC strategy × a crash at
+iteration 14. The driver kills the run, backward-scans the NVM image
+with the two algorithm invariants (orthogonality p·q=0 and residual
+r=b-Az), resumes, and reports the uniform ScenarioResult — comparing the
+large-problem case (loses ~1 iteration) against the small-problem case
+(cache holds everything: restart from scratch).
 
     PYTHONPATH=src python examples/cg_crash_recovery.py
 """
 
 import numpy as np
 
-from repro.algorithms.cg import ADCC_CG, make_spd_system, plain_cg
+from repro.algorithms.cg import make_spd_system, plain_cg
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 
 def demo(n: int, label: str) -> None:
     print(f"\n== {label}: n={n} "
           f"(working set ≈ {(4 * n * 8 * 16) / 1e6:.1f} MB vs 2 MB cache)")
-    A, b = make_spd_system(n, nnz_per_row=8, seed=n)
-    cg = ADCC_CG(A, b, iters=16, cfg=NVMConfig(cache_bytes=2 * 1024 * 1024))
-    res = cg.run(crash_at_iter=14)
-    z_ref = plain_cg(A, b, 16)
-    print(f"   crash @ iter {res.crashed_at}; invariant scan accepted "
-          f"iteration {res.restart_iter} "
-          f"({res.iterations_lost} iteration(s) lost)")
-    if res.recovery is not None:
-        for j, reports in zip(range(res.crashed_at, -2, -1),
-                              res.recovery.reports[:3]):
+    res = run_scenario(("cg", {"n": n, "iters": 16, "seed": n}), "adcc",
+                       CrashPlan.at_step(14),
+                       cfg=NVMConfig(cache_bytes=2 * 1024 * 1024))
+    print(f"   crash @ iter {res.crash_step}; invariant scan accepted "
+          f"iteration {res.restart_point} "
+          f"({res.steps_lost} iteration(s) lost)")
+    recovery = res.info.get("recovery")
+    if recovery is not None:
+        for j, reports in zip(range(res.crash_step, -2, -1),
+                              recovery.reports[:3]):
             line = ", ".join(f"{r.name}: {'OK' if r.ok else 'BAD'} "
                              f"({r.detail})" for r in reports)
             print(f"   iter {j}: {line}")
-    err = float(np.max(np.abs(res.z - z_ref)))
+    A, b = make_spd_system(n, nnz_per_row=8, seed=n)
+    err = float(np.max(np.abs(res.info["z"] - plain_cg(A, b, 16))))
     print(f"   resumed to completion; |z - z_ref|_max = {err:.2e} "
           f"({'CORRECT' if err < 1e-8 else 'WRONG'})")
 

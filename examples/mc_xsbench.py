@@ -1,37 +1,48 @@
-"""Paper §III.D end to end: Monte-Carlo XSBench with selective flushing.
+"""Paper §III.D end to end: Monte-Carlo XSBench with selective flushing,
+as three scenario cells on identical counter-based random streams.
 
-Runs the cross-section lookup benchmark three ways on identical random
-streams: no crash, crash+basic restart (loses counts — the paper's
-Fig. 10 surprise), crash+selective flush (bitwise-correct, Fig. 12).
+The flush policy is the algorithm-directed design choice, so it is a
+*workload parameter*: "basic" (index-only flush) loses counts after a
+crash+restart — the paper's Fig. 10 surprise — while "selective"
+(Fig. 11) restarts bitwise-correct (Fig. 12).
 
     PYTHONPATH=src python examples/mc_xsbench.py
 """
 
 import numpy as np
 
-from repro.algorithms.xsbench import ADCC_XSBench, XSBenchConfig
 from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, run_scenario
 
 
 def main() -> None:
-    cfg = XSBenchConfig(lookups=60_000, grid_points=20_000)
+    params = dict(lookups=60_000, grid_points=20_000, n_nuclides=34,
+                  n_materials=12, max_nuclides_per_material=8,
+                  flush_every_frac=1e-4, seed=7)
     nvm = NVMConfig(cache_bytes=2 * 1024 * 1024, replacement="fifo")
-    crash_at = cfg.lookups // 10   # 10% in, as in the paper
+    crash = CrashPlan.at_step(params["lookups"] // 10 - 1)  # 10% in
 
-    ok = ADCC_XSBench(cfg, nvm, policy="selective").run()
-    basic = ADCC_XSBench(cfg, nvm, policy="basic").run(crash_at=crash_at)
-    sel = ADCC_XSBench(cfg, nvm, policy="selective").run(crash_at=crash_at)
+    ok = run_scenario(("xsbench", {**params, "policy": "selective"}),
+                      "adcc", CrashPlan.no_crash(), cfg=nvm)
+    basic = run_scenario(("xsbench", {**params, "policy": "basic"}),
+                         "adcc", crash, cfg=nvm)
+    sel = run_scenario(("xsbench", {**params, "policy": "selective"}),
+                       "adcc", crash, cfg=nvm)
 
     print("interaction-type fractions (%):")
     print(f"  {'type':>6s} {'no crash':>9s} {'basic':>9s} {'selective':>10s}")
     for t in range(5):
-        print(f"  {t+1:>6d} {100*ok.fractions[t]:>9.3f} "
-              f"{100*basic.fractions[t]:>9.3f} {100*sel.fractions[t]:>10.3f}")
-    print(f"\nbasic restart: lost {cfg.lookups - int(basic.counts.sum())} "
-          f"counts ({basic.iterations_lost} iterations of stale counters)")
+        print(f"  {t+1:>6d} {100*ok.info['fractions'][t]:>9.3f} "
+              f"{100*basic.info['fractions'][t]:>9.3f} "
+              f"{100*sel.info['fractions'][t]:>10.3f}")
+    lookups = params["lookups"]
+    print(f"\nbasic restart: lost "
+          f"{lookups - int(basic.info['counts'].sum())} counts "
+          f"({basic.steps_lost} iterations of stale counters)")
     print(f"selective flush: counts bitwise-identical to no-crash run: "
-          f"{np.array_equal(sel.counts, ok.counts)} "
-          f"(loss bound = {int(cfg.lookups * cfg.flush_every_frac)} lookups)")
+          f"{np.array_equal(sel.info['counts'], ok.info['counts'])} "
+          f"(loss bound = {int(lookups * params['flush_every_frac'])} "
+          f"lookups)")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ eviction pressure the paper's performance characterization relies on.
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -201,65 +201,34 @@ class ADCC_CG:
 
     # -- driver -----------------------------------------------------------------
     def run(self, crash_at_iter: Optional[int] = None) -> CGRunResult:
-        """Run CG; optionally crash at the *end* of iteration ``crash_at_iter``
-        (after its stores, before the next counter flush), then recover and
-        resume to completion."""
-        t0 = time.perf_counter()
-        rho = self._init_iterates()
-        crashed_at = None
-        i = 0
-        while i < self.iters:
-            rho = self._iterate(i, rho)
-            if crash_at_iter is not None and i == crash_at_iter:
-                crashed_at = i
-                break
-            i += 1
-        elapsed = time.perf_counter() - t0
-        done = i + (1 if crashed_at is not None else 0)
-        avg_iter = elapsed / max(1, done if crashed_at is None else crashed_at + 1)
+        """Deprecated: run CG, optionally crashing at the *end* of
+        iteration ``crash_at_iter`` (after its stores, before the next
+        counter flush), then recover and resume to completion.
 
-        if crashed_at is None:
-            return CGRunResult(
-                z=self.z.get(self.iters), iters_done=self.iters, crashed_at=None,
-                restart_iter=None, iterations_lost=None, detect_seconds=0.0,
-                resume_seconds=0.0, avg_iter_seconds=avg_iter,
-                modeled_overhead_seconds=self.emu.modeled_seconds(),
-            )
+        This is a legacy shim over the unified scenario driver — use
+        ``repro.scenarios.run_scenario(("cg", {...}), "adcc", plan)``.
+        """
+        warnings.warn(
+            "ADCC_CG.run() is deprecated; use repro.scenarios.run_scenario("
+            "('cg', params), 'adcc', CrashPlan.at_step(k))",
+            DeprecationWarning, stacklevel=2)
+        from ..scenarios import CrashPlan, run_scenario
+        from ..scenarios.workloads import CGWorkload
 
-        # ---- crash + recovery -------------------------------------------------
-        self.emu.crash()
-        outcome = self.recover(upper_iter=self.counter.nvm_value())
-        restart = outcome.restart_point
-        lost = crashed_at - restart if restart >= 0 else crashed_at + 1
-
-        # resume: reload consistent iterates from NVM and recompute forward
-        t1 = time.perf_counter()
-        if restart >= 0:
-            # versions p[restart+1], q[restart], r[restart+1], z[restart+1] valid
-            self.p.set(restart + 1, self.p.nvm_version(restart + 1))
-            self.q.set(restart, self.q.nvm_version(restart))
-            self.r.set(restart + 1, self.r.nvm_version(restart + 1))
-            self.z.set(restart + 1, self.z.nvm_version(restart + 1))
-            r_cur = self.r.get(restart + 1)
-            rho = float(r_cur @ r_cur)
-            resume_from = restart + 1
-        else:
-            rho = self._init_iterates()
-            resume_from = 0
-        for j in range(resume_from, self.iters):
-            rho = self._iterate(j, rho)
-        resume_elapsed = time.perf_counter() - t1
-        # "resuming computation time" = only the re-done work up to the crash
-        redo_iters = max(0, crashed_at + 1 - resume_from)
-        resume_seconds = avg_iter * redo_iters
-
+        # old semantics: a crash point past the last iteration never fires
+        plan = (CrashPlan.at_step(crash_at_iter)
+                if crash_at_iter is not None and 0 <= crash_at_iter < self.iters
+                else CrashPlan.no_crash())
+        res = run_scenario(CGWorkload(impl=self), "adcc", plan)
         return CGRunResult(
-            z=self.z.get(self.iters), iters_done=self.iters, crashed_at=crashed_at,
-            restart_iter=restart, iterations_lost=lost,
-            detect_seconds=outcome.detection_seconds,
-            resume_seconds=resume_seconds, avg_iter_seconds=avg_iter,
-            modeled_overhead_seconds=self.emu.modeled_seconds(),
-            recovery=outcome,
+            z=res.info["z"], iters_done=self.iters,
+            crashed_at=res.crash_step, restart_iter=res.restart_point,
+            iterations_lost=res.info.get("iterations_lost"),
+            detect_seconds=res.detect_seconds,
+            resume_seconds=res.resume_seconds,
+            avg_iter_seconds=res.avg_step_seconds,
+            modeled_overhead_seconds=res.modeled_total_seconds,
+            recovery=res.info.get("recovery"),
         )
 
     # -- recovery ------------------------------------------------------------------

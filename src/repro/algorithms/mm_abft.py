@@ -19,7 +19,7 @@ recomputed (or, when the damage is a single element, corrected in place).
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -114,77 +114,38 @@ class ABFTMatmul:
 
     # -- driver ---------------------------------------------------------------
     def run(self, crash_after: Optional[Tuple[str, int]] = None) -> MMRunResult:
-        """Run the two-loop ABFT MM. ``crash_after=("loop1", s)`` crashes
-        right after chunk s of loop 1 completes (paper's crash test 1);
-        ``("loop2", b)`` after row-block b of loop 2 (crash test 2)."""
-        t0 = time.perf_counter()
-        crashed_in = None
-        chunks_lost = 0
-        corrected = 0
-        detect_s = 0.0
-        resume_chunks = 0
+        """Deprecated: run the two-loop ABFT MM. ``crash_after=("loop1",
+        s)`` crashes right after chunk s of loop 1 completes (paper's
+        crash test 1); ``("loop2", b)`` after row-block b of loop 2
+        (crash test 2).
 
-        s = 0
-        while s < self.nchunks:
-            self._loop1_chunk(s)
-            if crash_after == ("loop1", s):
-                crashed_in = "loop1"
-                break
-            s += 1
-        loop1_done = s + (1 if crashed_in else 0)
-        elapsed1 = time.perf_counter() - t0
-        avg_chunk = elapsed1 / max(1, loop1_done)
+        This is a legacy shim over the unified scenario driver — use
+        ``repro.scenarios.run_scenario(("mm", {...}), "adcc", plan)``.
+        """
+        warnings.warn(
+            "ABFTMatmul.run() is deprecated; use repro.scenarios."
+            "run_scenario(('mm', params), 'adcc', CrashPlan.at_phase(...))",
+            DeprecationWarning, stacklevel=2)
+        from ..scenarios import CrashPlan, run_scenario
+        from ..scenarios.workloads import MMWorkload
 
-        if crashed_in == "loop1":
-            self.emu.crash()
-            bad, corrected, detect_s = self._recover_loop1()
-            chunks_lost = len(bad)
-            for sb in bad:                     # recompute torn chunks
-                self._loop1_chunk(sb)
-            resume_chunks = len(bad)
-            for s2 in range(loop1_done, self.nchunks):   # finish loop 1
-                self._loop1_chunk(s2)
-
-        # ---- loop 2 -----------------------------------------------------------
-        t1 = time.perf_counter()
-        b = 0
-        while b < len(self.row_blocks):
-            self._loop2_block(b)
-            if crash_after == ("loop2", b) and crashed_in is None:
-                crashed_in = "loop2"
-                break
-            b += 1
-        blocks_done = b + (1 if crashed_in == "loop2" else 0)
-        elapsed2 = time.perf_counter() - t1
-        avg_block = elapsed2 / max(1, blocks_done)
-
-        if crashed_in == "loop2":
-            self.emu.crash()
-            # loop-2 recomputation consumes the C_s chunks, whose *data*
-            # relied on cache eviction — verify their checksums first and
-            # recompute any chunk that had not fully reached NVM.
-            bad_chunks, corrected, d1 = self._recover_loop1()
-            for sb in bad_chunks:
-                self._loop1_chunk(sb)
-            bad_blocks, d2 = self._recover_loop2(blocks_done)
-            detect_s = d1 + d2
-            chunks_lost = len(bad_blocks)
-            for bb in bad_blocks:
-                self._loop2_block(bb)
-            resume_chunks = len(bad_blocks)
-            for b2 in range(blocks_done, len(self.row_blocks)):
-                self._loop2_block(b2)
-            avg_chunk = avg_block
-
-        Cf = self.C_temp.view.copy()
-        C = abft.strip(Cf)
-        oracle = self.A @ self.B
-        max_err = float(np.max(np.abs(C - oracle)))
+        plan = CrashPlan.no_crash()
+        if crash_after is not None:
+            loop, idx = crash_after
+            # old semantics: an out-of-range crash point simply never fires
+            if (loop == "loop1" and 0 <= idx < self.nchunks) or (
+                    loop == "loop2" and 0 <= idx < len(self.row_blocks)):
+                plan = CrashPlan.at_phase(loop, idx)
+        res = run_scenario(MMWorkload(impl=self), "adcc", plan)
         return MMRunResult(
-            C=C, crashed_in=crashed_in, chunks_lost=chunks_lost,
-            corrected_elements=corrected, detect_seconds=detect_s,
-            resume_seconds=avg_chunk * resume_chunks, avg_chunk_seconds=avg_chunk,
-            modeled_overhead_seconds=self.emu.modeled_seconds(), max_error=max_err,
+            C=res.info["C"], crashed_in=res.info.get("crashed_in"),
+            chunks_lost=res.info.get("chunks_lost", 0),
+            corrected_elements=res.info.get("corrected_elements", 0),
+            detect_seconds=res.detect_seconds,
+            resume_seconds=res.resume_seconds,
+            avg_chunk_seconds=res.avg_step_seconds,
+            modeled_overhead_seconds=res.modeled_total_seconds,
+            max_error=res.metrics["max_error"],
         )
 
     # -- recovery ---------------------------------------------------------------

@@ -25,7 +25,7 @@ replays the same per-iteration random inputs — the paper does the same
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -188,55 +188,34 @@ class ADCC_XSBench:
     # -- driver ------------------------------------------------------------------
     def run(self, crash_at: Optional[int] = None,
             restart: bool = True) -> XSBenchResult:
-        cfg = self.cfg
-        t0 = time.perf_counter()
-        i = 0
-        crashed_at = None
-        while i < cfg.lookups:
-            if self.policy == "basic":
-                self._index[0] = i
-                self._index.flush()
-            self._lookup(i)
-            if self.policy == "every":
-                self._flush_critical(i + 1)
-            elif self.policy == "selective" and (i + 1) % self.flush_every == 0:
-                self._flush_critical(i + 1)
-            i += 1
-            if crash_at is not None and i == crash_at:
-                crashed_at = i
-                break
-        wall = time.perf_counter() - t0
+        """Deprecated: run the lookup loop, optionally crashing after
+        ``crash_at`` lookups completed; with ``restart`` recover from
+        the persisted index/counters and resume.
 
-        lost = 0
-        if crashed_at is not None and restart:
-            self.emu.crash()
-            # recovery: resume from the persisted index with the persisted
-            # counters/macro_xs (whatever reached NVM)
-            if self.policy == "basic":
-                resume_i = int(self._index.nvm[0])  # flushed every iteration
-            else:
-                resume_i = int(self._index.nvm[0])  # last selective flush
-            # counters/macro revert to NVM automatically via crash();
-            # measure how many counted iterations were lost:
-            counted = int(sum(int(c.view[0]) for c in self._counters))
-            lost = max(0, resume_i - counted) + (crashed_at - resume_i)
-            for j in range(resume_i, cfg.lookups):
-                self._lookup(j)
-                if self.policy == "every":
-                    self._flush_critical(j + 1)
-                elif self.policy == "selective" and (j + 1) % self.flush_every == 0:
-                    self._flush_critical(j + 1)
-                elif self.policy == "basic":
-                    self._index[0] = j
-                    self._index.flush()
+        This is a legacy shim over the unified scenario driver — use
+        ``repro.scenarios.run_scenario(("xsbench", {...}), "adcc", plan)``.
+        """
+        warnings.warn(
+            "ADCC_XSBench.run() is deprecated; use repro.scenarios."
+            "run_scenario(('xsbench', params), 'adcc', CrashPlan.at_step(k))",
+            DeprecationWarning, stacklevel=2)
+        from ..scenarios import CrashPlan, run_scenario
+        from ..scenarios.workloads import XSBenchWorkload
 
-        counts = np.array([int(c.view[0]) for c in self._counters])
-        total = max(1, int(counts.sum()))
+        # old semantics: the crash check ran after the loop counter was
+        # incremented, so crash_at=0 (or None, or > lookups) never fires
+        plan = (CrashPlan.at_step(crash_at - 1)
+                if crash_at and 0 < crash_at <= self.cfg.lookups
+                else CrashPlan.no_crash())
+        res = run_scenario(XSBenchWorkload(impl=self), "adcc", plan,
+                           recover=restart)
         return XSBenchResult(
-            counts=counts, fractions=counts / total,
-            macro_xs=self._macro.view.copy(),
-            lookups_done=cfg.lookups if (crashed_at is None or restart) else crashed_at,
-            crashed_at=crashed_at, iterations_lost=lost,
-            modeled_overhead_seconds=self.emu.modeled_seconds(),
-            wall_seconds=wall,
+            counts=res.info["counts"], fractions=res.info["fractions"],
+            macro_xs=res.info["macro_xs"],
+            lookups_done=res.steps_done,
+            crashed_at=(res.crash_step + 1
+                        if res.crash_step is not None else None),
+            iterations_lost=res.info.get("iterations_lost", 0),
+            modeled_overhead_seconds=res.modeled_total_seconds,
+            wall_seconds=res.wall_seconds,
         )

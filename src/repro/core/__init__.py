@@ -15,6 +15,11 @@ Algorithm knowledge (paper SIII.B-D):
   versioned               iteration-versioned persistent arrays
 ADCC-for-training (TPU adaptation, DESIGN.md S2-3):
   acc_state, slots        incremental checksums + multi-slot verified recovery
+
+The scenario layer above this package (``repro.scenarios``) composes
+these pieces into the unified Workload x ConsistencyStrategy x CrashPlan
+experiment matrix: strategies there wrap CheckpointBaseline / TxManager /
+the ADCC paths, and run_scenario()/sweep() drive them over the emulator.
 """
 
 from .backends import (

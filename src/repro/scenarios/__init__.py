@@ -1,0 +1,100 @@
+"""repro.scenarios — the unified scenario layer: every crash-consistence
+experiment is one point in Workload × ConsistencyStrategy × CrashPlan.
+
+The paper's comparison matrix (3 algorithms × 7 mechanisms × many crash
+points) used to be hand-wired into each algorithm driver and each
+benchmark figure; this package factors the three axes apart so a new
+mechanism, workload, or crash scenario is one registry entry, not six
+file edits.
+
+Module map:
+
+  workloads   Workload protocol + adapters for the paper's algorithms
+              (CGWorkload, MMWorkload, XSBenchWorkload) and the
+              WORKLOADS registry. Workloads run in "adcc" mode (the
+              paper's extended algorithm) or "plain" mode (the
+              unmodified baseline the traditional mechanisms protect).
+  strategies  ConsistencyStrategy protocol + STRATEGIES registry:
+              none / adcc / undo_log / checkpoint_{hdd,nvm,nvm_dram},
+              with "@interval" variants; wraps the core TxManager and
+              CheckpointBaseline machinery.
+  crashplan   Declarative CrashPlan: no_crash / at_step / at_phase /
+              at_fraction / seeded random batches; ``torn=True`` crashes
+              inside the step boundary (exercises rollback paths).
+  costmodel   StepCostProfile + mechanism_step_seconds(): the single
+              source for the paper's Figs. 4/8/13 modeled mechanism
+              costs, and mechanism_cases() — the canonical 7-mechanism
+              comparison axis.
+  driver      run_scenario() -> ScenarioResult (uniform overhead /
+              recompute / correctness / traffic fields) and sweep(),
+              the batched matrix runner that emits BENCH_scenarios.json.
+
+Ten-line tour::
+
+    from repro.scenarios import CrashPlan, run_scenario, sweep
+
+    res = run_scenario(("cg", {"n": 8192, "iters": 16}), "adcc",
+                       CrashPlan.at_step(14))
+    print(res.restart_point, res.steps_lost, res.correct)
+
+    cells = sweep(workloads=("cg", "mm", "xsbench"),
+                  strategies=("none", "adcc", "undo_log",
+                              "checkpoint_nvm"),
+                  plans=(CrashPlan.no_crash(), CrashPlan.at_fraction(0.5)),
+                  out_json="BENCH_scenarios.json")
+"""
+
+from .crashplan import CrashPlan, CrashPoint
+from .costmodel import (
+    MECHANISM_CASES,
+    MechanismCase,
+    StepCostProfile,
+    cg_step_profile,
+    mechanism_cases,
+    mechanism_step_seconds,
+    mm_step_profile,
+    xsbench_step_profile,
+)
+from .workloads import (
+    WORKLOADS,
+    CGWorkload,
+    FinalReport,
+    MMWorkload,
+    RecoveryResult,
+    Workload,
+    XSBenchWorkload,
+    make_workload,
+    register_workload,
+)
+from .strategies import (
+    STRATEGIES,
+    AdccStrategy,
+    CheckpointStrategy,
+    ConsistencyStrategy,
+    NativeStrategy,
+    UndoLogStrategy,
+    make_strategy,
+    register_strategy,
+    strategy_names,
+)
+from .driver import (
+    DEFAULT_SWEEP_PLANS,
+    ScenarioResult,
+    run_scenario,
+    sweep,
+    write_scenarios_json,
+)
+
+__all__ = [
+    "CrashPlan", "CrashPoint",
+    "MECHANISM_CASES", "MechanismCase", "StepCostProfile",
+    "mechanism_cases", "mechanism_step_seconds",
+    "cg_step_profile", "mm_step_profile", "xsbench_step_profile",
+    "WORKLOADS", "Workload", "CGWorkload", "MMWorkload", "XSBenchWorkload",
+    "RecoveryResult", "FinalReport", "make_workload", "register_workload",
+    "STRATEGIES", "ConsistencyStrategy", "NativeStrategy", "AdccStrategy",
+    "UndoLogStrategy", "CheckpointStrategy",
+    "make_strategy", "register_strategy", "strategy_names",
+    "DEFAULT_SWEEP_PLANS", "ScenarioResult", "run_scenario", "sweep",
+    "write_scenarios_json",
+]

@@ -1,0 +1,147 @@
+"""Declarative crash plans — *where* a run dies, separated from *what*
+runs and *how* it persists.
+
+EasyCrash-style systematic crash-scenario sweeps need crash points to be
+first-class values that can be enumerated, seeded, and serialized, not
+``crash_at=...`` kwargs threaded through every driver. A
+:class:`CrashPlan` names a family of crash points against an abstract
+step axis; :meth:`CrashPlan.resolve` grounds it against a concrete
+workload (which knows its step count and phase layout) into a list of
+:class:`CrashPoint` s.
+
+Supported kinds:
+
+  no_crash()             run to completion
+  at_step(k)             crash after step k completes (and, unless
+                         ``torn=True``, after the strategy's persistence
+                         hook for step k ran)
+  at_phase(name, i)      crash after the i-th step of a named workload
+                         phase ("loop1" / "loop2" for ABFT-MM)
+  at_fraction(f)         crash after step floor(f * (n_steps - 1))
+  random(count, seed)    ``count`` seeded uniform crash points — the
+                         batch axis sweep() expands into one cell each
+
+``torn=True`` models a crash *inside* the step boundary: the step's
+computation happened but the consistency mechanism's end-of-step
+persistence (undo-log commit, checkpoint, selective flush) did not —
+the case that exercises rollback paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .workloads import Workload
+
+__all__ = ["CrashPlan", "CrashPoint"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashPoint:
+    """A concrete, grounded crash point for one scenario run."""
+
+    step: Optional[int]          # None => never crash
+    torn: bool = False
+
+    def describe(self) -> str:
+        if self.step is None:
+            return "no_crash"
+        return f"step={self.step}" + (":torn" if self.torn else "")
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashPlan:
+    kind: str                    # "none" | "step" | "phase" | "fraction" | "random"
+    step: Optional[int] = None
+    phase: Optional[str] = None
+    index: Optional[int] = None
+    fraction: Optional[float] = None
+    count: int = 1
+    seed: int = 0
+    torn: bool = False
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def no_crash(cls) -> "CrashPlan":
+        return cls(kind="none")
+
+    @classmethod
+    def at_step(cls, step: int, torn: bool = False) -> "CrashPlan":
+        if step < 0:
+            raise ValueError("crash step must be >= 0")
+        return cls(kind="step", step=int(step), torn=torn)
+
+    @classmethod
+    def at_phase(cls, phase: str, index: int, torn: bool = False) -> "CrashPlan":
+        return cls(kind="phase", phase=phase, index=int(index), torn=torn)
+
+    @classmethod
+    def at_fraction(cls, fraction: float, torn: bool = False) -> "CrashPlan":
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError("fraction must be in [0, 1]")
+        return cls(kind="fraction", fraction=float(fraction), torn=torn)
+
+    @classmethod
+    def random(cls, count: int = 1, seed: int = 0,
+               torn: bool = False) -> "CrashPlan":
+        if count < 1:
+            raise ValueError("count must be >= 1")
+        return cls(kind="random", count=int(count), seed=int(seed), torn=torn)
+
+    # -- grounding ------------------------------------------------------------
+    def resolve(self, workload: "Workload") -> List[CrashPoint]:
+        """Ground this plan against a set-up workload. Returns one
+        :class:`CrashPoint` per scenario cell (>1 only for ``random``)."""
+        n = workload.n_steps
+        if self.kind == "none":
+            return [CrashPoint(None)]
+        if self.kind == "step":
+            if not 0 <= self.step < n:
+                raise ValueError(
+                    f"crash step {self.step} outside [0, {n}) for "
+                    f"workload {workload.name!r}")
+            return [CrashPoint(self.step, self.torn)]
+        if self.kind == "phase":
+            phases = workload.phases()
+            if self.phase not in phases:
+                raise ValueError(
+                    f"workload {workload.name!r} has no phase "
+                    f"{self.phase!r} (has {sorted(phases)})")
+            rng = phases[self.phase]
+            if not 0 <= self.index < len(rng):
+                raise ValueError(
+                    f"phase {self.phase!r} has {len(rng)} steps, "
+                    f"index {self.index} out of range")
+            return [CrashPoint(rng[self.index], self.torn)]
+        if self.kind == "fraction":
+            return [CrashPoint(min(n - 1, int(self.fraction * (n - 1))),
+                               self.torn)]
+        if self.kind == "random":
+            if self.count > n:
+                raise ValueError(
+                    f"random plan requests {self.count} distinct crash "
+                    f"points but workload {workload.name!r} has only "
+                    f"{n} steps")
+            rng = np.random.default_rng(self.seed)
+            steps = sorted(int(s) for s in
+                           rng.choice(n, size=self.count, replace=False))
+            return [CrashPoint(s, self.torn) for s in steps]
+        raise ValueError(f"unknown crash plan kind {self.kind!r}")
+
+    def describe(self) -> str:
+        torn = ":torn" if self.torn else ""
+        if self.kind == "none":
+            return "no_crash"
+        if self.kind == "step":
+            return f"step:{self.step}{torn}"
+        if self.kind == "phase":
+            return f"phase:{self.phase}:{self.index}{torn}"
+        if self.kind == "fraction":
+            return f"frac:{self.fraction:g}{torn}"
+        if self.kind == "random":
+            return f"rand:n{self.count}:s{self.seed}{torn}"
+        return self.kind

@@ -1,0 +1,282 @@
+"""Scenario driver: one loop that runs any Workload under any
+ConsistencyStrategy against any CrashPlan, and a batched sweep.
+
+``run_scenario`` is the uniform experiment harness the paper's
+per-algorithm drivers used to hand-roll: set up, step, optionally crash
+(at a step boundary, or *torn* — inside the boundary, before the
+strategy's persistence hook), recover through the strategy, resume, and
+report a :class:`ScenarioResult` with overhead / recompute / correctness
+/ traffic fields that mean the same thing in every cell.
+
+``sweep`` expands a workloads × strategies × crash-plans matrix
+(seeded ``random`` plans contribute one cell per sampled crash point),
+runs every cell on the vectorized emulation backend, and optionally
+writes the ``BENCH_scenarios.json`` artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.nvm import NVMConfig
+from .crashplan import CrashPlan, CrashPoint
+from .strategies import ConsistencyStrategy, make_strategy
+from .workloads import Workload, make_workload
+
+__all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS"]
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """Uniform per-cell outcome (JSON-serializable via ``to_json_dict``)."""
+
+    workload: str
+    workload_params: Dict[str, Any]
+    strategy: str
+    plan: str
+    crash_step: Optional[int]
+    torn: bool
+    steps_total: int
+    steps_done: int
+    restart_point: Optional[int]     # newest surviving step; -1 => scratch
+    resume_step: Optional[int]
+    steps_lost: int
+    steps_recomputed: int
+    detect_seconds: float
+    resume_seconds: float
+    avg_step_seconds: float
+    overhead_seconds: float          # modeled mechanism cost (cost model)
+    modeled_total_seconds: float     # emulator's total modeled seconds
+    wall_seconds: float
+    correct: bool
+    metrics: Dict[str, float]
+    traffic: Dict[str, int]
+    info: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
+
+    def to_json_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("info")
+        return _jsonable(d)
+
+
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
+def _run_point(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
+               plan_desc: str, recover: bool) -> ScenarioResult:
+    crash_step, torn = point.step, point.torn
+    emu = wl.emu
+    n = wl.n_steps
+    crashed = False
+
+    t0 = time.perf_counter()
+    durations: List[float] = []
+    for i in range(n):
+        ts = time.perf_counter()
+        strat.before_step(i)
+        wl.step(i)
+        if torn and crash_step == i:
+            durations.append(time.perf_counter() - ts)
+            crashed = True
+            break
+        strat.after_step(i)
+        durations.append(time.perf_counter() - ts)
+        if crash_step == i:
+            crashed = True
+            break
+    steps_run = (crash_step + 1) if crashed else n
+    # normalize recompute against the phase the crash landed in (loop-2
+    # block additions are much cheaper than loop-1 chunk multiplies)
+    if crashed:
+        phase_rng = next((rng for rng in wl.phases().values()
+                          if crash_step in rng), range(n))
+        phase_durs = [durations[j] for j in phase_rng if j < len(durations)]
+    else:
+        phase_durs = durations
+    avg_step = sum(phase_durs) / max(1, len(phase_durs))
+
+    restart: Optional[int] = None
+    resume: Optional[int] = None
+    lost = 0
+    redo = 0
+    detect_s = 0.0
+    rec_info: Dict[str, Any] = {}
+    steps_done = n
+
+    if crashed:
+        emu.crash()
+        if recover:
+            rec = strat.recover(crash_step, torn)
+            restart, resume = rec.restart_point, rec.resume_step
+            detect_s, redo = rec.detect_seconds, rec.redo_steps
+            lost = rec.steps_lost if rec.steps_lost is not None else (
+                crash_step - restart if restart >= 0 else crash_step + 1)
+            rec_info = dict(rec.info)
+            for j in range(rec.resume_step, n):
+                strat.before_step(j)
+                wl.step(j)
+                strat.after_step(j)
+        else:
+            steps_done = crash_step + 1
+
+    report = wl.finalize()
+    profile = wl.step_cost_profile()
+    interval = strat.interval * (profile.interval_steps
+                                 if strat.wants_adcc else 1)
+    events = steps_run // max(1, interval)
+    overhead = events * strat.modeled_step_seconds(profile, emu.cfg)
+    stats = emu.stats
+
+    info = dict(report.info)
+    info.update(rec_info)
+    return ScenarioResult(
+        workload=wl.name, workload_params=wl.params(),
+        strategy=strat.name, plan=plan_desc,
+        crash_step=crash_step, torn=torn,
+        steps_total=n, steps_done=steps_done,
+        restart_point=restart, resume_step=resume,
+        steps_lost=lost, steps_recomputed=redo,
+        detect_seconds=detect_s, resume_seconds=avg_step * redo,
+        avg_step_seconds=avg_step,
+        overhead_seconds=overhead,
+        modeled_total_seconds=emu.modeled_seconds(),
+        wall_seconds=time.perf_counter() - t0,
+        correct=report.correct, metrics=dict(report.metrics),
+        traffic={
+            "nvm_bytes_written": stats.nvm_bytes_written,
+            "nvm_bytes_read": stats.nvm_bytes_read,
+            "lines_flushed": stats.lines_flushed,
+            "lines_evicted": stats.lines_evicted,
+        },
+        info=info,
+    )
+
+
+def run_scenario(workload, strategy, plan: Optional[CrashPlan] = None,
+                 cfg: Optional[NVMConfig] = None, *,
+                 recover: bool = True) -> ScenarioResult:
+    """Run one scenario cell.
+
+    workload: Workload | "name" | ("name", {params})
+    strategy: ConsistencyStrategy | "name" | "name@interval"
+    plan:     CrashPlan (default: no_crash). Must resolve to a single
+              crash point — use :func:`sweep` for batch (``random``) plans.
+    """
+    plan = plan or CrashPlan.no_crash()
+    wl = make_workload(workload)
+    strat = make_strategy(strategy)
+    if wl.mode is None:
+        wl.setup(cfg, "adcc" if strat.wants_adcc else "plain")
+    elif strat.wants_adcc and wl.mode != "adcc":
+        raise ValueError(f"workload set up in mode {wl.mode!r} cannot run "
+                         f"the {strat.name!r} strategy")
+    strat.attach(wl)
+    points = plan.resolve(wl)
+    if len(points) != 1:
+        raise ValueError(
+            f"plan {plan.describe()!r} resolves to {len(points)} crash "
+            f"points; run_scenario takes exactly one (use sweep())")
+    return _run_point(wl, strat, points[0], plan.describe(), recover)
+
+
+DEFAULT_SWEEP_PLANS: Sequence[CrashPlan] = (
+    CrashPlan.no_crash(),
+    CrashPlan.at_fraction(0.3),
+    CrashPlan.at_fraction(0.75, torn=True),
+    CrashPlan.random(count=1, seed=0),
+)
+
+
+def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
+          strategies: Sequence = ("none", "adcc", "undo_log",
+                                  "checkpoint_hdd", "checkpoint_nvm",
+                                  "checkpoint_nvm_dram"),
+          plans: Sequence[CrashPlan] = DEFAULT_SWEEP_PLANS,
+          cfg: Optional[NVMConfig] = None,
+          out_json: Optional[str] = None,
+          progress=None) -> List[ScenarioResult]:
+    """Run the full workloads × strategies × crash-plans matrix.
+
+    Every cell gets a fresh workload instance (problem inputs are cached
+    across cells) on the configured emulation backend — the vectorized
+    default is what makes a 70+-cell matrix tractable in one call. A
+    seeded ``CrashPlan.random(count=k)`` contributes ``k`` cells.
+
+    ``out_json`` writes the ``BENCH_scenarios.json`` artifact:
+    ``{"schema": ..., "cells": [<ScenarioResult>...], "skipped": [...]}``.
+
+    A plan that cannot be grounded for some (workload, strategy) pair —
+    e.g. ``at_phase("loop2", ...)`` against the single-loop plain-mode
+    MM, or ``at_step(k)`` past a shorter workload's step count — skips
+    that cell (recorded in ``skipped``) instead of aborting the matrix.
+    """
+    results: List[ScenarioResult] = []
+    skipped: List[Dict[str, str]] = []
+    for wl_spec in workloads:
+        for strat_spec in strategies:
+            for plan in plans:
+                # ground the plan once per (workload, strategy) pair so
+                # batch plans expand into per-crash-point cells
+                probe = make_workload(wl_spec)
+                strat = make_strategy(strat_spec)
+                probe.setup(cfg, "adcc" if strat.wants_adcc else "plain")
+                try:
+                    points = plan.resolve(probe)
+                except ValueError as exc:
+                    skipped.append({"workload": probe.name,
+                                    "strategy": strat.name,
+                                    "plan": plan.describe(),
+                                    "reason": str(exc)})
+                    continue
+                for pi, point in enumerate(points):
+                    if pi == 0:
+                        wl, st = probe, strat
+                    else:
+                        wl = make_workload(wl_spec)
+                        st = make_strategy(strat_spec)
+                        wl.setup(cfg, "adcc" if st.wants_adcc else "plain")
+                    st.attach(wl)
+                    res = _run_point(wl, st, point, plan.describe(),
+                                     recover=True)
+                    results.append(res)
+                    if progress is not None:
+                        progress(res)
+    if out_json:
+        write_scenarios_json(out_json, results, skipped=skipped)
+    return results
+
+
+def dump_json(path: str, payload) -> None:
+    """The artifact writer (benchmarks/common.py re-exports it)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+
+
+def write_scenarios_json(path: str, results: Iterable[ScenarioResult],
+                         skipped: Optional[List[Dict[str, str]]] = None
+                         ) -> None:
+    dump_json(path, {
+        "schema": "repro.scenarios.sweep/v1",
+        "cells": [r.to_json_dict() for r in results],
+        "skipped": skipped or [],
+    })

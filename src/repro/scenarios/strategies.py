@@ -1,0 +1,255 @@
+"""Consistency strategies — *how* a run persists, behind one protocol.
+
+A :class:`ConsistencyStrategy` observes the workload's step axis through
+``before_step``/``after_step`` hooks and owns post-crash
+:meth:`~ConsistencyStrategy.recover`. The registry covers the paper's
+mechanism space:
+
+  none                 no fault tolerance: crash => restart from scratch
+  adcc                 algorithm-directed consistence (delegates the
+                       flush policy and invariant-scan recovery to the
+                       workload's ``adcc_*`` hooks — §III.B-D)
+  undo_log             PMEM-style transactions over the critical regions
+                       (wraps :class:`repro.core.transactions.TxManager`)
+  checkpoint_hdd       synchronous full-copy checkpoint to a hard drive
+  checkpoint_nvm       ... to NVM (copy + cache flush)
+  checkpoint_nvm_dram  ... on the heterogeneous NVM/DRAM system
+                       (wrap :class:`repro.core.checkpoint_baseline.CheckpointBaseline`)
+
+Per-interval variants are spelled ``"<name>@<k>"`` ("checkpoint_nvm@5"
+checkpoints every 5 steps). Every strategy also exposes the *modeled*
+per-persist-event cost (``modeled_step_seconds``) used by the paper's
+runtime figures — see :mod:`repro.scenarios.costmodel`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from ..core.checkpoint_baseline import CheckpointBaseline
+from ..core.nvm import NVMConfig
+from ..core.transactions import TxManager
+from . import costmodel
+from .workloads import RecoveryResult, Workload
+
+__all__ = [
+    "ConsistencyStrategy",
+    "NativeStrategy",
+    "AdccStrategy",
+    "UndoLogStrategy",
+    "CheckpointStrategy",
+    "STRATEGIES",
+    "register_strategy",
+    "make_strategy",
+    "strategy_names",
+]
+
+
+class ConsistencyStrategy:
+    """Base: a no-op mechanism (also the "none"/native baseline)."""
+
+    key: str = "none"
+    wants_adcc: bool = False
+
+    def __init__(self, interval: int = 1):
+        if interval < 1:
+            raise ValueError("interval must be >= 1")
+        self.interval = int(interval)
+        self.wl: Optional[Workload] = None
+
+    @property
+    def name(self) -> str:
+        return self.key if self.interval == 1 else f"{self.key}@{self.interval}"
+
+    def attach(self, workload: Workload) -> None:
+        self.wl = workload
+
+    # -- step hooks -------------------------------------------------------------
+    def before_step(self, i: int) -> None:
+        pass
+
+    def after_step(self, i: int) -> None:
+        pass
+
+    # -- crash recovery ----------------------------------------------------------
+    def recover(self, crash_step: int, torn: bool) -> RecoveryResult:
+        self.wl.reset()
+        return RecoveryResult(resume_step=0, restart_point=-1,
+                              redo_steps=crash_step + 1,
+                              steps_lost=crash_step + 1, from_scratch=True)
+
+    # -- modeled cost -------------------------------------------------------------
+    @classmethod
+    def modeled_step_seconds(cls, profile: costmodel.StepCostProfile,
+                             cfg: NVMConfig) -> float:
+        return costmodel.mechanism_step_seconds(cls.key, profile, cfg)
+
+
+class NativeStrategy(ConsistencyStrategy):
+    key = "none"
+
+
+class AdccStrategy(ConsistencyStrategy):
+    """Algorithm-directed crash consistence: persistence and recovery
+    are the workload's own (paper's central mechanism)."""
+
+    key = "adcc"
+    wants_adcc = True
+
+    def __init__(self, interval: int = 1):
+        if interval != 1:
+            raise ValueError(
+                "adcc cadence is algorithm-directed: configure it on the "
+                "workload (e.g. xsbench flush_every_frac), not via @interval")
+        super().__init__(interval)
+
+    def before_step(self, i):
+        self.wl.adcc_before_step(i)
+
+    def after_step(self, i):
+        self.wl.adcc_after_step(i)
+
+    def recover(self, crash_step, torn):
+        return self.wl.adcc_recover(crash_step)
+
+
+class UndoLogStrategy(ConsistencyStrategy):
+    """One undo-log transaction per ``interval`` steps over the critical
+    regions (copy-before-write at tx begin, flush at commit; a crash
+    mid-interval rolls the open transaction back to its begin point)."""
+
+    key = "undo_log"
+
+    def __init__(self, interval: int = 1):
+        super().__init__(interval)
+        self._mgr: Optional[TxManager] = None
+        self._last_commit: Optional[int] = None
+        self._scalars: Dict[str, float] = {}
+
+    def attach(self, workload):
+        super().attach(workload)
+        # per-run state: a reused instance must not recover from a
+        # previous run's commit point
+        self._mgr = TxManager(workload.emu)
+        self._last_commit = None
+        self._scalars = {}
+
+    def before_step(self, i):
+        if i % self.interval == 0:
+            tx = self._mgr.begin()
+            for region in self.wl.live_regions():
+                tx.snapshot(region)
+
+    def after_step(self, i):
+        if (i + 1) % self.interval == 0:
+            self._mgr.commit()
+            self._last_commit = i
+            self._scalars = self.wl.scalar_state()
+
+    def recover(self, crash_step, torn):
+        rolled_back = self._mgr.recover()
+        if rolled_back:
+            # the rollback mutated the NVM image after the crash reload:
+            # re-sync program truth with the restored image
+            self.wl.resync_from_nvm()
+        if self._last_commit is None:
+            self.wl.reset()
+            return RecoveryResult(resume_step=0, restart_point=-1,
+                                  redo_steps=crash_step + 1,
+                                  steps_lost=crash_step + 1,
+                                  from_scratch=True,
+                                  info={"rolled_back": rolled_back})
+        self.wl.restore(None, self._scalars, self._last_commit)
+        resume = self._last_commit + 1
+        return RecoveryResult(
+            resume_step=resume, restart_point=self._last_commit,
+            redo_steps=crash_step + 1 - resume,
+            steps_lost=crash_step - self._last_commit,
+            info={"rolled_back": rolled_back})
+
+
+class CheckpointStrategy(ConsistencyStrategy):
+    """Synchronous full-copy checkpoint every ``interval`` steps."""
+
+    key = "checkpoint_nvm"
+    target = "nvm_only"
+
+    def __init__(self, interval: int = 1):
+        super().__init__(interval)
+        self._base: Optional[CheckpointBaseline] = None
+        self._last_ckpt: Optional[int] = None
+        self._scalars: Dict[str, float] = {}
+
+    def attach(self, workload):
+        super().attach(workload)
+        # per-run state: a reused instance must not recover from a
+        # previous run's checkpoint step
+        self._base = CheckpointBaseline(workload.emu, self.target)
+        self._last_ckpt = None
+        self._scalars = {}
+
+    def after_step(self, i):
+        if (i + 1) % self.interval == 0:
+            self._base.checkpoint(i, self.wl.live_regions())
+            self._last_ckpt = i
+            self._scalars = self.wl.scalar_state()
+
+    def recover(self, crash_step, torn):
+        if self._last_ckpt is None:
+            self.wl.reset()
+            return RecoveryResult(resume_step=0, restart_point=-1,
+                                  redo_steps=crash_step + 1,
+                                  steps_lost=crash_step + 1,
+                                  from_scratch=True)
+        arrays = self._base.restore()
+        self.wl.restore(arrays, self._scalars, self._last_ckpt)
+        resume = self._last_ckpt + 1
+        return RecoveryResult(
+            resume_step=resume, restart_point=self._last_ckpt,
+            redo_steps=crash_step + 1 - resume,
+            steps_lost=crash_step - self._last_ckpt)
+
+
+class CheckpointHddStrategy(CheckpointStrategy):
+    key = "checkpoint_hdd"
+    target = "hdd"
+
+
+class CheckpointNvmDramStrategy(CheckpointStrategy):
+    key = "checkpoint_nvm_dram"
+    target = "nvm_dram"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+STRATEGIES: Dict[str, Callable[..., ConsistencyStrategy]] = {
+    "none": NativeStrategy,
+    "adcc": AdccStrategy,
+    "undo_log": UndoLogStrategy,
+    "checkpoint_hdd": CheckpointHddStrategy,
+    "checkpoint_nvm": CheckpointStrategy,
+    "checkpoint_nvm_dram": CheckpointNvmDramStrategy,
+}
+
+
+def register_strategy(name: str,
+                      factory: Callable[..., ConsistencyStrategy]) -> None:
+    STRATEGIES[name] = factory
+
+
+def strategy_names() -> List[str]:
+    return sorted(STRATEGIES)
+
+
+def make_strategy(spec) -> ConsistencyStrategy:
+    """spec: instance | "name" | "name@interval" (e.g. "checkpoint_nvm@5")."""
+    if isinstance(spec, ConsistencyStrategy):
+        return spec
+    name, _, interval = str(spec).partition("@")
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r} "
+                       f"(registered: {strategy_names()})")
+    return STRATEGIES[name](interval=int(interval)) if interval \
+        else STRATEGIES[name]()
