@@ -13,6 +13,7 @@ writes every suite's rows as one machine-readable artifact.
   fig10_12  MC correctness basic vs selective restart (paper Figs. 10+12)
   fig13     MC runtime, 7 mechanisms                  (paper Fig. 13)
   scenarios workload x strategy x crash-point sweep   (BENCH_scenarios.json)
+  sweep     fork-vs-rerun sweep-engine timing + gate  (BENCH_sweep.json)
   train     training-loop ADCC vs sync checkpoint     (beyond-paper)
   kernel    ABFT matmul fused-checksum overhead       (kernel-level)
 
@@ -32,7 +33,7 @@ import time
 
 from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
                fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
-               kernel_bench, scenarios_sweep, train_overhead)
+               kernel_bench, scenarios_sweep, sweep_timing, train_overhead)
 from .common import emit, rows_to_records, write_json
 
 SUITES = {
@@ -43,6 +44,7 @@ SUITES = {
     "fig10_12": fig10_12_mc_correctness,
     "fig13": fig13_mc_runtime,
     "scenarios": scenarios_sweep,
+    "sweep": sweep_timing,
     "train": train_overhead,
     "kernel": kernel_bench,
 }

@@ -6,21 +6,33 @@ characterization of post-crash consistence).
 
 Default matrix: 3 workloads × 6 strategies × 4 crash points = 72 cells.
 ``--smoke`` (or REPRO_SCENARIOS_SMOKE=1) shrinks it to the CI matrix:
-3 workloads × 3 strategies × 2 crash plans.
+3 workloads × 3 strategies × 2 crash plans. ``--engine fork|rerun``
+selects the sweep engine (fork default).
+
+This module also hosts the fork-vs-rerun engine comparison
+(:func:`fork_vs_rerun_timing` / :func:`run_timing`, surfaced as the
+``sweep`` suite in benchmarks/run.py and benchmarks/sweep_timing.py):
+a dense one-crash-point-per-step matrix timed under both engines,
+emitted to ``BENCH_sweep.json``, with a hard divergence gate — any
+cell whose deterministic payload differs between engines fails the run
+(CI relies on this).
 """
 
 from __future__ import annotations
 
 import os
-from typing import List
+import time
+from typing import Dict, List
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import DEFAULT_SWEEP_PLANS, CrashPlan, sweep
+from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan,
+                             deterministic_cell_dict, sweep)
 
-from .common import ART, Row, emit
+from .common import ART, Row, emit, write_json
 
 ARTIFACT = "scenarios_sweep.json"
 BENCH_JSON = os.path.join(ART, "BENCH_scenarios.json")
+BENCH_SWEEP_JSON = os.path.join(ART, "BENCH_sweep.json")
 
 WORKLOADS = (
     ("cg", {"n": 4096, "iters": 12}),
@@ -42,7 +54,106 @@ SMOKE_STRATEGIES = ("none", "adcc", "checkpoint_nvm")
 SMOKE_PLANS = (CrashPlan.no_crash(), CrashPlan.at_fraction(0.5))
 
 
-def run(smoke: bool = None) -> List[Row]:
+# -- fork-vs-rerun engine comparison (BENCH_sweep.json) ----------------------
+#
+# The dense matrix exercises the fork engine's reason to exist: ONE
+# crash point per step (exhaustive fig 3/7-style recompute curves), so
+# the rerun baseline pays O(setup + prefix + tail) per cell while fork
+# pays O(restore + tail) off a single shared forward pass. XSBench is
+# sized the way the application actually looks — large read-only
+# cross-section tables (copy-on-write snapshots capture them once) in
+# front of a comparatively short lookup loop — which is exactly the
+# shape where per-cell re-initialization dominates an EasyCrash-style
+# dense sweep.
+TIMING_WORKLOADS = (
+    ("cg", {"n": 4096, "iters": 16}),
+    ("mm", {"n": 48, "k": 4}),
+    ("xsbench", {"lookups": 40, "grid_points": 10_000, "n_nuclides": 40,
+                 "n_materials": 12, "max_nuclides_per_material": 8,
+                 "flush_every_frac": 0.1, "seed": 7}),
+)
+SMOKE_TIMING_WORKLOADS = (
+    ("cg", {"n": 2048, "iters": 10}),
+    ("mm", {"n": 48, "k": 4}),
+    ("xsbench", {"lookups": 24, "grid_points": 8000, "n_nuclides": 32,
+                 "n_materials": 8, "max_nuclides_per_material": 6,
+                 "flush_every_frac": 0.1, "seed": 7}),
+)
+TIMING_STRATEGIES = ("adcc", "undo_log", "checkpoint_nvm")
+TIMING_PLANS = (CrashPlan.no_crash(), CrashPlan.at_every_step())
+
+
+def fork_vs_rerun_timing(smoke: bool = None) -> Dict:
+    """Time the dense matrix under both engines and cross-check every
+    cell's deterministic payload. Returns the BENCH_sweep.json payload
+    (divergences included — callers decide whether to fail)."""
+    if smoke is None:
+        smoke = bool(int(os.environ.get("REPRO_SCENARIOS_SMOKE", "0")))
+    workloads = SMOKE_TIMING_WORKLOADS if smoke else TIMING_WORKLOADS
+    cfg = NVMConfig(cache_bytes=1 * 1024 * 1024)
+    kw = dict(workloads=workloads, strategies=TIMING_STRATEGIES,
+              plans=TIMING_PLANS, cfg=cfg)
+    seconds = {}
+    cells = {}
+    for engine in ("rerun", "fork"):
+        t0 = time.perf_counter()
+        cells[engine] = sweep(engine=engine, **kw)
+        seconds[engine] = time.perf_counter() - t0
+    divergences = []
+    for a, b in zip(cells["rerun"], cells["fork"]):
+        da, db = deterministic_cell_dict(a), deterministic_cell_dict(b)
+        if da != db:
+            divergences.append({
+                "workload": a.workload, "strategy": a.strategy,
+                "plan": a.plan, "crash_step": a.crash_step,
+                "fields": sorted(k for k in da if da[k] != db[k]),
+            })
+    if len(cells["rerun"]) != len(cells["fork"]):
+        divergences.append({"reason": "cell count mismatch",
+                            "rerun": len(cells["rerun"]),
+                            "fork": len(cells["fork"])})
+    return {
+        "schema": "repro.scenarios.sweep_timing/v1",
+        "smoke": bool(smoke),
+        "matrix": {
+            "workloads": [[w, p] for w, p in workloads],
+            "strategies": list(TIMING_STRATEGIES),
+            "plans": [p.describe() for p in TIMING_PLANS],
+        },
+        "cells": len(cells["fork"]),
+        "rerun_seconds": seconds["rerun"],
+        "fork_seconds": seconds["fork"],
+        "speedup": seconds["rerun"] / max(seconds["fork"], 1e-12),
+        "divergences": divergences,
+    }
+
+
+def run_timing(smoke: bool = None) -> List[Row]:
+    """The ``sweep`` suite: write BENCH_sweep.json, emit summary rows,
+    and FAIL on any fork/rerun divergence (the CI gate)."""
+    payload = fork_vs_rerun_timing(smoke)
+    write_json(BENCH_SWEEP_JSON, payload)
+    rows = [
+        Row("sweep/cells", payload["cells"],
+            f"plans={'+'.join(payload['matrix']['plans'])}"),
+        Row("sweep/rerun_seconds", payload["rerun_seconds"],
+            "every cell re-runs from step 0"),
+        Row("sweep/fork_seconds", payload["fork_seconds"],
+            "one forward pass per pair + per-cell tails"),
+        Row("sweep/speedup", payload["speedup"],
+            f"artifact={BENCH_SWEEP_JSON}"),
+        Row("sweep/divergences", len(payload["divergences"]),
+            "fork vs rerun deterministic payload mismatches (must be 0)"),
+    ]
+    if payload["divergences"]:
+        raise AssertionError(
+            f"fork and rerun sweep engines diverged on "
+            f"{len(payload['divergences'])} cells: "
+            f"{payload['divergences'][:3]} (see {BENCH_SWEEP_JSON})")
+    return rows
+
+
+def run(smoke: bool = None, engine: str = "fork") -> List[Row]:
     if smoke is None:
         smoke = bool(int(os.environ.get("REPRO_SCENARIOS_SMOKE", "0")))
     workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
@@ -50,7 +161,7 @@ def run(smoke: bool = None) -> List[Row]:
     plans = SMOKE_PLANS if smoke else PLANS
     cfg = NVMConfig(cache_bytes=1 * 1024 * 1024)
     cells = sweep(workloads=workloads, strategies=strategies, plans=plans,
-                  cfg=cfg, out_json=BENCH_JSON)
+                  cfg=cfg, out_json=BENCH_JSON, engine=engine)
     rows = []
     n_correct = 0
     for c in cells:
@@ -78,5 +189,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI matrix: 3 workloads x 3 strategies x 2 plans")
+    ap.add_argument("--engine", default="fork", choices=["fork", "rerun"],
+                    help="sweep execution engine (default: fork)")
     args = ap.parse_args()
-    emit(run(smoke=args.smoke or None), save_as=ARTIFACT)
+    emit(run(smoke=args.smoke or None, engine=args.engine), save_as=ARTIFACT)

@@ -1,0 +1,36 @@
+"""Fork-vs-rerun sweep-engine comparison — the ``sweep`` suite.
+
+Times a dense one-crash-point-per-step matrix (3 workloads × 3
+strategies × (no_crash + at_every_step)) under both sweep engines,
+writes ``BENCH_sweep.json`` with per-engine seconds + speedup, and
+fails if any cell's deterministic payload differs between engines.
+
+    PYTHONPATH=src python -m benchmarks.sweep_timing            # full
+    PYTHONPATH=src python -m benchmarks.sweep_timing --smoke    # CI
+
+The matrix definitions and comparison logic live in
+benchmarks/scenarios_sweep.py (``fork_vs_rerun_timing`` /
+``run_timing``); this module is the registered suite entry point.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import Row, emit
+from .scenarios_sweep import BENCH_SWEEP_JSON, run_timing  # noqa: F401
+
+ARTIFACT = "sweep_timing.json"
+
+
+def run(smoke: bool = None) -> List[Row]:
+    return run_timing(smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized dense matrix")
+    args = ap.parse_args()
+    emit(run(smoke=args.smoke or None), save_as=ARTIFACT)

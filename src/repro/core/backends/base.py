@@ -103,6 +103,25 @@ class MemoryBackend(Protocol):
         lost."""
         ...
 
+    # -- snapshot / fork ----------------------------------------------------
+    def snapshot(self) -> object:
+        """Capture the backend's volatile-cache state (occupancy, dirty
+        sets, replacement order) as an opaque, immutable value.
+
+        The snapshot must be restorable any number of times into the
+        *same* backend instance (same registered regions), and a
+        restored backend must replay any subsequent trace with charges,
+        images, and eviction decisions bit-identical to a from-scratch
+        run of prefix+trace — the contract the fork sweep engine and
+        tests/test_backend_equivalence.py rely on."""
+        ...
+
+    def restore(self, snap: object) -> None:
+        """Reset the cache state to a value captured by :meth:`snapshot`
+        on this instance. Registered truth arrays are NOT touched —
+        callers restore them separately (see CrashEmulator.restore)."""
+        ...
+
     # -- introspection ------------------------------------------------------
     @property
     def occupancy_lines(self) -> int:

@@ -175,6 +175,17 @@ class ReferenceLRUBackend:
         self._weight_used = 0
         return lost
 
+    # -- snapshot / fork ----------------------------------------------------
+    def snapshot(self) -> object:
+        # keys are (name, entry) tuples and values plain bools, so one
+        # OrderedDict copy is an exact deep capture incl. recency order
+        return (OrderedDict(self._lru), self._weight_used)
+
+    def restore(self, snap: object) -> None:
+        lru, weight = snap
+        self._lru = OrderedDict(lru)
+        self._weight_used = weight
+
     # -- introspection ------------------------------------------------------
     @property
     def occupancy_lines(self) -> int:

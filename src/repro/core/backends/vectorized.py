@@ -173,6 +173,7 @@ class VectorizedBackend:
     def _persist_entries(self, r: _Region, entries: np.ndarray) -> int:
         """Copy the given entries' truth spans into the image; returns the
         (clipped) byte count, matching the reference's per-entry charges."""
+        self.store.mark_image_dirty(r.name)
         ents = np.sort(entries)
         nbytes = int(r.entry_nbytes(ents).sum())
         n = r.truth.shape[0]
@@ -232,6 +233,7 @@ class VectorizedBackend:
         lo = entry * r.epe
         hi = min(lo + r.epe, r.truth.shape[0])
         r.image[lo:hi] = r.truth[lo:hi]
+        self.store.mark_image_dirty(r.name)
         return (hi - lo) * r.itemsize
 
     # -- program-visible operations ------------------------------------------
@@ -376,6 +378,55 @@ class VectorizedBackend:
         self._q_head = 0
         self._q_len = 0
         return lost
+
+    # -- snapshot / fork ----------------------------------------------------
+    def snapshot(self) -> object:
+        """Capture bitmaps/stamps per region plus the live queue slice.
+        Only the [head, len) window is copied — dead slots ahead of the
+        head are irrelevant to replay, so snapshots stay proportional to
+        live state, not queue history."""
+        sl = slice(self._q_head, self._q_len)
+        snap = {
+            "regions": {name: (r.present.copy(), r.dirty.copy(),
+                               r.stamp.copy())
+                        for name, r in self._regions.items()},
+            "clock": self._clock,
+            "weight_used": self._weight_used,
+            "queue": (self._q_rid[sl].copy(), self._q_entry[sl].copy(),
+                      self._q_stamp[sl].copy()),
+        }
+        for present, dirty, stamp in snap["regions"].values():
+            present.flags.writeable = False
+            dirty.flags.writeable = False
+            stamp.flags.writeable = False
+        for arr in snap["queue"]:
+            arr.flags.writeable = False
+        return snap
+
+    def restore(self, snap: object) -> None:
+        if set(snap["regions"]) != set(self._regions):
+            raise ValueError(
+                "snapshot regions do not match this backend's regions "
+                "(snapshots only restore into the instance that took them)")
+        for name, (present, dirty, stamp) in snap["regions"].items():
+            r = self._regions[name]
+            r.present[:] = present
+            r.dirty[:] = dirty
+            r.stamp[:] = stamp
+        self._clock = snap["clock"]
+        self._weight_used = snap["weight_used"]
+        q_rid, q_entry, q_stamp = snap["queue"]
+        k = q_rid.shape[0]
+        if self._q_rid.shape[0] < k:
+            cap = max(k, 2 * self._q_rid.shape[0])
+            self._q_rid = np.zeros(cap, dtype=np.int64)
+            self._q_entry = np.zeros(cap, dtype=np.int64)
+            self._q_stamp = np.zeros(cap, dtype=np.int64)
+        self._q_rid[:k] = q_rid
+        self._q_entry[:k] = q_entry
+        self._q_stamp[:k] = q_stamp
+        self._q_head = 0
+        self._q_len = k
 
     # -- introspection ------------------------------------------------------
     @property

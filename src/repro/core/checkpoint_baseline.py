@@ -67,3 +67,13 @@ class CheckpointBaseline:
         for data in self._area.values():
             self._emu.store.stats.charge_read(data.nbytes, cfg)
         return {k: v.copy() for k, v in self._area.items()}
+
+    # -- snapshot / fork ------------------------------------------------------
+    def state_snapshot(self) -> Dict[str, object]:
+        # checkpoint() replaces area arrays wholesale and restore()
+        # hands out copies, so a shallow dict copy is a true capture
+        return {"last_step": self.last_step, "area": dict(self._area)}
+
+    def restore_state(self, state: Dict[str, object]) -> None:
+        self.last_step = state["last_step"]
+        self._area = dict(state["area"])

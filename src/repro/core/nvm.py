@@ -50,6 +50,7 @@ __all__ = [
     "NVMStore",
     "VolatileCache",
     "CrashEmulator",
+    "EmuSnapshot",
 ]
 
 # Back-compat alias: the pre-backend cache class lives on as the
@@ -169,6 +170,11 @@ class NVMStore:
         self.image: Dict[str, np.ndarray] = {}
         self.meta: Dict[str, Tuple[Tuple[int, ...], np.dtype]] = {}
         self.stats = TrafficStats()
+        # monotonic per-region mutation counters: every image change bumps,
+        # so equal epochs mean equal contents — the copy-on-write predicate
+        # snapshots use to share/skip unchanged regions (mostly the big
+        # read-only inputs: CSR matrices, ABFT-encoded operands, MC grids)
+        self.image_epoch: Dict[str, int] = {}
 
     def alloc(self, name: str, shape: Tuple[int, ...], dtype) -> None:
         if name in self.image:
@@ -176,20 +182,55 @@ class NVMStore:
         dt = np.dtype(dtype)
         self.image[name] = np.zeros(int(np.prod(shape)), dtype=dt)
         self.meta[name] = (tuple(shape), dt)
+        self.image_epoch[name] = 0
 
     def free(self, name: str) -> None:
         self.image.pop(name, None)
         self.meta.pop(name, None)
+        self.image_epoch.pop(name, None)
+
+    def mark_image_dirty(self, name: str) -> None:
+        """Record an image mutation done outside :meth:`persist` (the
+        vectorized backend's direct writebacks, undo-log rollbacks)."""
+        self.image_epoch[name] += 1
 
     def persist(self, name: str, lo: int, hi: int, src: np.ndarray) -> None:
         """Copy src[lo:hi) (flat element indices) into the image."""
         self.image[name][lo:hi] = src[lo:hi]
+        self.image_epoch[name] += 1
 
     def read_view(self, name: str) -> np.ndarray:
         """The surviving (post-crash) contents, shaped. No cost charged:
         recovery-time reads are charged by the recovery code itself."""
         shape, _ = self.meta[name]
         return self.image[name].reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class EmuSnapshot:
+    """Full emulator state captured by :meth:`CrashEmulator.snapshot`.
+
+    Immutable (arrays are marked read-only): one snapshot can seed any
+    number of forked executions. Covers everything a replayed suffix
+    can observe — program truth, the persistent NVM image, traffic
+    stats (including the float ``modeled_seconds``), the backend's
+    volatile-cache state, and the crashed flag.
+
+    Truth/image arrays are copy-on-write at region granularity: a
+    region whose mutation epoch is unchanged since the previous
+    snapshot SHARES that snapshot's frozen array instead of recopying
+    it, and :meth:`CrashEmulator.restore` skips regions whose live
+    epoch still equals the snapshot's — so repeated snapshot/fork
+    cycles pay O(changed state), not O(total footprint).
+    """
+
+    truth: Dict[str, np.ndarray]
+    image: Dict[str, np.ndarray]
+    truth_epoch: Dict[str, int]
+    image_epoch: Dict[str, int]
+    stats: TrafficStats
+    backend: object
+    crashed: bool
 
 
 class CrashEmulator:
@@ -209,6 +250,13 @@ class CrashEmulator:
         self.store = NVMStore(self.cfg)
         self.backend = make_backend(self.cfg.backend, self.store, self.cfg)
         self._truth: Dict[str, np.ndarray] = {}
+        # truth-side mutation epochs (see NVMStore.image_epoch); every
+        # content change flows through write()/crash()/restore()/
+        # resync_truth(), each of which bumps
+        self._truth_epoch: Dict[str, int] = {}
+        # copy-on-write caches: name -> (epoch, frozen copy at that epoch)
+        self._cow_truth: Dict[str, Tuple[int, np.ndarray]] = {}
+        self._cow_image: Dict[str, Tuple[int, np.ndarray]] = {}
         self.crashed = False
 
     # back-compat: the pre-backend attribute name for the cache layer
@@ -225,6 +273,7 @@ class CrashEmulator:
         self.store.alloc(name, shape, dtype)
         truth = np.zeros(int(np.prod(shape)), dtype=np.dtype(dtype))
         self._truth[name] = truth
+        self._truth_epoch[name] = 0
         self.backend.register(name, truth, sector_lines=sector_lines)
         region = PersistentRegion(self, name, shape, np.dtype(dtype))
         if init is not None:
@@ -235,10 +284,14 @@ class CrashEmulator:
         self.backend.unregister(name)
         self.store.free(name)
         self._truth.pop(name, None)
+        self._truth_epoch.pop(name, None)
+        self._cow_truth.pop(name, None)
+        self._cow_image.pop(name, None)
 
     # program-visible operations (facade over the backend) --------------------
     def write(self, name: str, lo: int, hi: int) -> None:
         """Program stored truth[lo:hi) of ``name``."""
+        self._truth_epoch[name] += 1
         self.backend.write(name, lo, hi)
 
     def read(self, name: str, lo: int, hi: int) -> None:
@@ -257,14 +310,89 @@ class CrashEmulator:
     def crash(self) -> int:
         """Drop the volatile cache; reload every truth array from the NVM
         image (the program must now see only what survived)."""
+        # truth diverges from the image exactly where unwritten-back dirty
+        # entries sit, so only those regions' contents actually change here
+        changed = [name for name in self._truth
+                   if self.backend.dirty_entries(name).size]
         lost = self.backend.crash()
         for name, truth in self._truth.items():
             truth[:] = self.store.image[name]
+        for name in changed:
+            self._truth_epoch[name] += 1
         self.crashed = True
         return lost
 
     def post_crash_view(self, name: str) -> np.ndarray:
         return self.store.read_view(name)
+
+    def resync_truth(self, name: str) -> None:
+        """Reload one region's truth from the (possibly rolled-back) NVM
+        image — the undo-log recovery path. Routed through the emulator
+        so snapshot epochs stay coherent."""
+        self._truth[name][:] = self.store.image[name]
+        self._truth_epoch[name] += 1
+
+    # snapshot / fork ----------------------------------------------------------
+    def snapshot(self) -> EmuSnapshot:
+        """Capture the complete emulator state (truth arrays, NVM image,
+        traffic stats, cache state) for later :meth:`restore`. The fork
+        sweep engine uses this to evaluate many crash points off one
+        shared prefix execution.
+
+        Copy-on-write: regions whose mutation epoch is unchanged since
+        the previous snapshot share that snapshot's frozen arrays.
+        Mutating ``region.view`` directly bypasses epoch tracking the
+        same way it bypasses cache accounting (regions.py) — all
+        shipped workloads go through ``PersistentRegion.__setitem__``.
+        """
+        def _cow(arrays: Dict[str, np.ndarray], epochs: Dict[str, int],
+                 cache: Dict[str, Tuple[int, np.ndarray]]
+                 ) -> Dict[str, np.ndarray]:
+            out = {}
+            for name, arr in arrays.items():
+                e = epochs[name]
+                hit = cache.get(name)
+                if hit is None or hit[0] != e:
+                    c = arr.copy()
+                    c.flags.writeable = False
+                    cache[name] = hit = (e, c)
+                out[name] = hit[1]
+            return out
+
+        return EmuSnapshot(
+            truth=_cow(self._truth, self._truth_epoch, self._cow_truth),
+            image=_cow(self.store.image, self.store.image_epoch,
+                       self._cow_image),
+            truth_epoch=dict(self._truth_epoch),
+            image_epoch=dict(self.store.image_epoch),
+            stats=self.store.stats.snapshot(),
+            backend=self.backend.snapshot(),
+            crashed=self.crashed,
+        )
+
+    def restore(self, snap: EmuSnapshot) -> None:
+        """Reset to a snapshot taken on this instance. In-place: every
+        region keeps its identity (PersistentRegions, VersionedArrays
+        and algorithm objects holding references stay valid). Regions
+        whose epoch still matches the snapshot's are skipped — the big
+        read-only inputs cost nothing to restore."""
+        if set(snap.truth) != set(self._truth):
+            raise ValueError(
+                "snapshot regions do not match this emulator's regions "
+                "(snapshots only restore into the instance that took them)")
+        for name, arr in snap.truth.items():
+            if self._truth_epoch[name] != snap.truth_epoch[name]:
+                self._truth[name][:] = arr
+                # epochs only move forward: a rewind could alias a cached
+                # copy-on-write entry with different contents
+                self._truth_epoch[name] += 1
+        for name, arr in snap.image.items():
+            if self.store.image_epoch[name] != snap.image_epoch[name]:
+                self.store.image[name][:] = arr
+                self.store.image_epoch[name] += 1
+        self.store.stats = snap.stats.snapshot()
+        self.backend.restore(snap.backend)
+        self.crashed = snap.crashed
 
     def truth_flat(self, name: str) -> np.ndarray:
         return self._truth[name]

@@ -70,8 +70,24 @@ class UndoLogTx:
         image, restoring pre-transaction values."""
         for name, lo, hi, old in reversed(self._log):
             self._emu.store.image[name][lo:hi] = old
+            self._emu.store.mark_image_dirty(name)
             self._emu.store.stats.charge_write(old.nbytes, self._emu.cfg)
         self._log.clear()
+
+    # -- snapshot / fork ------------------------------------------------------
+    def state_snapshot(self) -> Dict[str, object]:
+        # log entries are write-once (old-value arrays are only ever
+        # read after append), so a shallow list copy is a true capture
+        return {"tx_id": self.tx_id, "committed": self.committed,
+                "log": list(self._log)}
+
+    @classmethod
+    def from_state(cls, emu: CrashEmulator,
+                   state: Dict[str, object]) -> "UndoLogTx":
+        tx = cls(emu, state["tx_id"])
+        tx._log = list(state["log"])
+        tx.committed = state["committed"]
+        return tx
 
 
 class TxManager:
@@ -109,3 +125,15 @@ class TxManager:
             self.open_tx = None
             return True
         return False
+
+    # -- snapshot / fork ------------------------------------------------------
+    def state_snapshot(self) -> Dict[str, object]:
+        return {"next_id": self._next_id,
+                "open_tx": (None if self.open_tx is None
+                            else self.open_tx.state_snapshot())}
+
+    def restore_state(self, state: Dict[str, object]) -> None:
+        self._next_id = state["next_id"]
+        self.open_tx = (None if state["open_tx"] is None
+                        else UndoLogTx.from_state(self._emu,
+                                                  state["open_tx"]))

@@ -28,6 +28,14 @@ Module map:
   driver      run_scenario() -> ScenarioResult (uniform overhead /
               recompute / correctness / traffic fields) and sweep(),
               the batched matrix runner that emits BENCH_scenarios.json.
+              sweep(engine="fork"|"rerun") selects execution: "fork"
+              (default) shares one prefix run per (workload, strategy)
+              pair via snapshots, "rerun" re-executes every cell from
+              step 0 (the oracle both must match cell-for-cell).
+  sweep_engine the prefix-sharing fork engine: snapshot/restore on
+              MemoryBackend + Workload + ConsistencyStrategy makes a
+              crash-point batch O(tail) instead of O(full re-run),
+              so dense plans (CrashPlan.at_every_step()) are tractable.
 
 Ten-line tour::
 
@@ -78,8 +86,12 @@ from .strategies import (
     strategy_names,
 )
 from .driver import (
+    AVG_STEP_JITTER_FLOOR,
     DEFAULT_SWEEP_PLANS,
+    SWEEP_ENGINES,
+    WALL_CLOCK_FIELDS,
     ScenarioResult,
+    deterministic_cell_dict,
     run_scenario,
     sweep,
     write_scenarios_json,
@@ -95,6 +107,8 @@ __all__ = [
     "STRATEGIES", "ConsistencyStrategy", "NativeStrategy", "AdccStrategy",
     "UndoLogStrategy", "CheckpointStrategy",
     "make_strategy", "register_strategy", "strategy_names",
-    "DEFAULT_SWEEP_PLANS", "ScenarioResult", "run_scenario", "sweep",
+    "AVG_STEP_JITTER_FLOOR", "DEFAULT_SWEEP_PLANS", "SWEEP_ENGINES",
+    "WALL_CLOCK_FIELDS", "ScenarioResult", "deterministic_cell_dict",
+    "run_scenario", "sweep",
     "write_scenarios_json",
 ]

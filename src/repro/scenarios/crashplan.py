@@ -20,6 +20,9 @@ Supported kinds:
   at_fraction(f)         crash after step floor(f * (n_steps - 1))
   random(count, seed)    ``count`` seeded uniform crash points — the
                          batch axis sweep() expands into one cell each
+  at_every_step()        one crash point per step — the exhaustive
+                         recompute-vs-crash-point curve (figs 3/7);
+                         dense, so pair it with the fork sweep engine
 
 ``torn=True`` models a crash *inside* the step boundary: the step's
 computation happened but the consistency mechanism's end-of-step
@@ -92,6 +95,10 @@ class CrashPlan:
             raise ValueError("count must be >= 1")
         return cls(kind="random", count=int(count), seed=int(seed), torn=torn)
 
+    @classmethod
+    def at_every_step(cls, torn: bool = False) -> "CrashPlan":
+        return cls(kind="every", torn=torn)
+
     # -- grounding ------------------------------------------------------------
     def resolve(self, workload: "Workload") -> List[CrashPoint]:
         """Ground this plan against a set-up workload. Returns one
@@ -130,6 +137,8 @@ class CrashPlan:
             steps = sorted(int(s) for s in
                            rng.choice(n, size=self.count, replace=False))
             return [CrashPoint(s, self.torn) for s in steps]
+        if self.kind == "every":
+            return [CrashPoint(s, self.torn) for s in range(n)]
         raise ValueError(f"unknown crash plan kind {self.kind!r}")
 
     def describe(self) -> str:
@@ -144,4 +153,6 @@ class CrashPlan:
             return f"frac:{self.fraction:g}{torn}"
         if self.kind == "random":
             return f"rand:n{self.count}:s{self.seed}{torn}"
+        if self.kind == "every":
+            return f"every{torn}"
         return self.kind

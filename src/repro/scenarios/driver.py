@@ -11,7 +11,18 @@ report a :class:`ScenarioResult` with overhead / recompute / correctness
 ``sweep`` expands a workloads × strategies × crash-plans matrix
 (seeded ``random`` plans contribute one cell per sampled crash point),
 runs every cell on the vectorized emulation backend, and optionally
-writes the ``BENCH_scenarios.json`` artifact.
+writes the ``BENCH_scenarios.json`` artifact. Two execution engines:
+
+  engine="fork"  (default) the prefix-sharing engine in
+                 :mod:`repro.scenarios.sweep_engine`: each (workload,
+                 strategy) pair runs forward ONCE, snapshots are
+                 captured at the union of the plans' crash points, and
+                 every cell forks from its snapshot — crash, recover,
+                 run only the tail. O(tail) per cell.
+  engine="rerun" the from-scratch baseline: every cell re-executes its
+                 whole prefix on a fresh workload. O(full run) per
+                 cell; kept as the oracle the fork engine must match
+                 cell-for-cell (tests/benchmarks enforce it).
 """
 
 from __future__ import annotations
@@ -20,7 +31,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Any, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,7 +40,37 @@ from .crashplan import CrashPlan, CrashPoint
 from .strategies import ConsistencyStrategy, make_strategy
 from .workloads import Workload, make_workload
 
-__all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS"]
+__all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
+           "AVG_STEP_JITTER_FLOOR", "SWEEP_ENGINES", "WALL_CLOCK_FIELDS",
+           "deterministic_cell_dict"]
+
+# Below this measured mean step wall-time, per-step timing is dominated
+# by timer resolution / interpreter jitter, so ``avg_step_seconds``
+# falls back to the emulator's deterministic modeled per-step cost
+# (which also makes fork- and rerun-engine results comparable bit for
+# bit at smoke sizes).
+AVG_STEP_JITTER_FLOOR = 1e-3
+
+SWEEP_ENGINES = ("fork", "rerun")
+
+# ScenarioResult fields derived from host wall-clock measurement.
+# Everything else is deterministic — modeled seconds, traffic counts,
+# recompute/restart bookkeeping, correctness — and must come out
+# IDENTICAL from both sweep engines (tests + the sweep_timing
+# benchmark's divergence gate enforce it). avg_step_seconds /
+# resume_seconds are wall-derived only above AVG_STEP_JITTER_FLOOR,
+# but whether the floor triggers is itself a wall-clock fact, so the
+# engine-invariance contract excludes all three.
+WALL_CLOCK_FIELDS = ("wall_seconds", "avg_step_seconds", "resume_seconds")
+
+
+def deterministic_cell_dict(res: "ScenarioResult") -> Dict[str, Any]:
+    """``to_json_dict`` minus :data:`WALL_CLOCK_FIELDS` — the payload on
+    which fork- and rerun-engine sweeps must agree cell-for-cell."""
+    d = res.to_json_dict()
+    for f in WALL_CLOCK_FIELDS:
+        d.pop(f)
+    return d
 
 
 @dataclasses.dataclass
@@ -50,6 +91,10 @@ class ScenarioResult:
     steps_recomputed: int
     detect_seconds: float
     resume_seconds: float
+    # mean seconds per pre-crash step of the phase the crash landed in:
+    # measured wall-clock when the mean is >= AVG_STEP_JITTER_FLOOR,
+    # otherwise the emulator's modeled per-step seconds (wall timing at
+    # smoke sizes is pure jitter; the modeled cost is deterministic)
     avg_step_seconds: float
     overhead_seconds: float          # modeled mechanism cost (cost model)
     modeled_total_seconds: float     # emulator's total modeled seconds
@@ -79,38 +124,66 @@ def _jsonable(obj):
     return obj
 
 
-def _run_point(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
-               plan_desc: str, recover: bool) -> ScenarioResult:
+def _avg_step_seconds(wall_durs: Sequence[float],
+                      modeled_durs: Sequence[float]) -> float:
+    wall = sum(wall_durs) / max(1, len(wall_durs))
+    if wall >= AVG_STEP_JITTER_FLOOR:
+        return wall
+    return sum(modeled_durs) / max(1, len(modeled_durs))
+
+
+def _forward(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint
+             ) -> Tuple[bool, List[float], List[float]]:
+    """Run forward until completion or the crash point. Returns
+    (crashed, per-step wall durations, per-step modeled-seconds deltas)
+    — the modeled deltas are the deterministic counterpart the jitter
+    floor falls back to. A torn crash's last entry covers only
+    before_step+step (the persistence hook never ran)."""
     crash_step, torn = point.step, point.torn
     emu = wl.emu
-    n = wl.n_steps
+    wall: List[float] = []
+    modeled: List[float] = []
     crashed = False
-
-    t0 = time.perf_counter()
-    durations: List[float] = []
-    for i in range(n):
+    for i in range(wl.n_steps):
         ts = time.perf_counter()
+        m0 = emu.modeled_seconds()
         strat.before_step(i)
         wl.step(i)
         if torn and crash_step == i:
-            durations.append(time.perf_counter() - ts)
+            wall.append(time.perf_counter() - ts)
+            modeled.append(emu.modeled_seconds() - m0)
             crashed = True
             break
         strat.after_step(i)
-        durations.append(time.perf_counter() - ts)
+        wall.append(time.perf_counter() - ts)
+        modeled.append(emu.modeled_seconds() - m0)
         if crash_step == i:
             crashed = True
             break
+    return crashed, wall, modeled
+
+
+def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
+            plan_desc: str, recover: bool, crashed: bool,
+            wall_durs: Sequence[float], modeled_durs: Sequence[float],
+            t0: float) -> ScenarioResult:
+    """Crash (if armed), recover, run the tail, finalize, and assemble
+    the ScenarioResult. Shared verbatim by the rerun path (after its own
+    forward pass) and the fork engine (after restoring a snapshot)."""
+    crash_step, torn = point.step, point.torn
+    emu = wl.emu
+    n = wl.n_steps
     steps_run = (crash_step + 1) if crashed else n
     # normalize recompute against the phase the crash landed in (loop-2
     # block additions are much cheaper than loop-1 chunk multiplies)
     if crashed:
         phase_rng = next((rng for rng in wl.phases().values()
                           if crash_step in rng), range(n))
-        phase_durs = [durations[j] for j in phase_rng if j < len(durations)]
+        idx = [j for j in phase_rng if j < len(wall_durs)]
+        avg_step = _avg_step_seconds([wall_durs[j] for j in idx],
+                                     [modeled_durs[j] for j in idx])
     else:
-        phase_durs = durations
-    avg_step = sum(phase_durs) / max(1, len(phase_durs))
+        avg_step = _avg_step_seconds(wall_durs, modeled_durs)
 
     restart: Optional[int] = None
     resume: Optional[int] = None
@@ -169,6 +242,14 @@ def _run_point(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     )
 
 
+def _run_point(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
+               plan_desc: str, recover: bool) -> ScenarioResult:
+    t0 = time.perf_counter()
+    crashed, wall, modeled = _forward(wl, strat, point)
+    return _finish(wl, strat, point, plan_desc, recover, crashed,
+                   wall, modeled, t0)
+
+
 def run_scenario(workload, strategy, plan: Optional[CrashPlan] = None,
                  cfg: Optional[NVMConfig] = None, *,
                  recover: bool = True) -> ScenarioResult:
@@ -211,13 +292,18 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           plans: Sequence[CrashPlan] = DEFAULT_SWEEP_PLANS,
           cfg: Optional[NVMConfig] = None,
           out_json: Optional[str] = None,
-          progress=None) -> List[ScenarioResult]:
+          progress=None,
+          engine: str = "fork") -> List[ScenarioResult]:
     """Run the full workloads × strategies × crash-plans matrix.
 
-    Every cell gets a fresh workload instance (problem inputs are cached
-    across cells) on the configured emulation backend — the vectorized
-    default is what makes a 70+-cell matrix tractable in one call. A
-    seeded ``CrashPlan.random(count=k)`` contributes ``k`` cells.
+    All plans of a (workload, strategy) pair are grounded against one
+    probe workload; a seeded ``CrashPlan.random(count=k)`` contributes
+    ``k`` cells. ``engine`` selects execution (module docstring):
+    ``"fork"`` (default) runs each pair forward once and forks every
+    cell from a snapshot at its crash point; ``"rerun"`` re-executes
+    each cell from step 0 on a fresh workload instance. Both engines
+    produce identical cells (modulo ``wall_seconds``); fork makes dense
+    plans (``CrashPlan.at_every_step()``) tractable.
 
     ``out_json`` writes the ``BENCH_scenarios.json`` artifact:
     ``{"schema": ..., "cells": [<ScenarioResult>...], "skipped": [...]}``.
@@ -227,27 +313,42 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     MM, or ``at_step(k)`` past a shorter workload's step count — skips
     that cell (recorded in ``skipped``) instead of aborting the matrix.
     """
+    if engine not in SWEEP_ENGINES:
+        raise ValueError(f"unknown sweep engine {engine!r}; "
+                         f"choose from {SWEEP_ENGINES}")
+    from .sweep_engine import run_pair_forked  # late: avoids import cycle
+
     results: List[ScenarioResult] = []
     skipped: List[Dict[str, str]] = []
     for wl_spec in workloads:
         for strat_spec in strategies:
+            # one probe per (workload, strategy) pair grounds every plan
+            probe = make_workload(wl_spec)
+            strat = make_strategy(strat_spec)
+            probe.setup(cfg, "adcc" if strat.wants_adcc else "plain")
+            grounded: List[Tuple[CrashPlan, List[CrashPoint]]] = []
             for plan in plans:
-                # ground the plan once per (workload, strategy) pair so
-                # batch plans expand into per-crash-point cells
-                probe = make_workload(wl_spec)
-                strat = make_strategy(strat_spec)
-                probe.setup(cfg, "adcc" if strat.wants_adcc else "plain")
                 try:
-                    points = plan.resolve(probe)
+                    grounded.append((plan, plan.resolve(probe)))
                 except ValueError as exc:
                     skipped.append({"workload": probe.name,
                                     "strategy": strat.name,
                                     "plan": plan.describe(),
                                     "reason": str(exc)})
-                    continue
-                for pi, point in enumerate(points):
-                    if pi == 0:
-                        wl, st = probe, strat
+            if not grounded:
+                continue
+            if engine == "fork":
+                results.extend(
+                    run_pair_forked(probe, strat, grounded,
+                                    progress=progress))
+                continue
+            reuse: Optional[Tuple[Workload, ConsistencyStrategy]] = \
+                (probe, strat)
+            for plan, points in grounded:
+                for point in points:
+                    if reuse is not None:
+                        wl, st = reuse
+                        reuse = None
                     else:
                         wl = make_workload(wl_spec)
                         st = make_strategy(strat_spec)

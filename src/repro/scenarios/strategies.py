@@ -78,6 +78,17 @@ class ConsistencyStrategy:
                               redo_steps=crash_step + 1,
                               steps_lost=crash_step + 1, from_scratch=True)
 
+    # -- snapshot / fork ----------------------------------------------------------
+    def snapshot(self) -> object:
+        """Capture mid-run mechanism state (undo log, checkpoint area,
+        commit counters) for the fork sweep engine. The base strategy —
+        and ADCC, whose state lives entirely in the workload's regions —
+        has nothing to carry."""
+        return None
+
+    def restore_snapshot(self, snap: object) -> None:
+        """Reset to a :meth:`snapshot` taken on this attached instance."""
+
     # -- modeled cost -------------------------------------------------------------
     @classmethod
     def modeled_step_seconds(cls, profile: costmodel.StepCostProfile,
@@ -167,6 +178,16 @@ class UndoLogStrategy(ConsistencyStrategy):
             steps_lost=crash_step - self._last_commit,
             info={"rolled_back": rolled_back})
 
+    def snapshot(self):
+        return {"last_commit": self._last_commit,
+                "scalars": dict(self._scalars),
+                "mgr": self._mgr.state_snapshot()}
+
+    def restore_snapshot(self, snap):
+        self._last_commit = snap["last_commit"]
+        self._scalars = dict(snap["scalars"])
+        self._mgr.restore_state(snap["mgr"])
+
 
 class CheckpointStrategy(ConsistencyStrategy):
     """Synchronous full-copy checkpoint every ``interval`` steps."""
@@ -208,6 +229,16 @@ class CheckpointStrategy(ConsistencyStrategy):
             resume_step=resume, restart_point=self._last_ckpt,
             redo_steps=crash_step + 1 - resume,
             steps_lost=crash_step - self._last_ckpt)
+
+    def snapshot(self):
+        return {"last_ckpt": self._last_ckpt,
+                "scalars": dict(self._scalars),
+                "base": self._base.state_snapshot()}
+
+    def restore_snapshot(self, snap):
+        self._last_ckpt = snap["last_ckpt"]
+        self._scalars = dict(snap["scalars"])
+        self._base.restore_state(snap["base"])
 
 
 class CheckpointHddStrategy(CheckpointStrategy):

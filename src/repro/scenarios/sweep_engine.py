@@ -1,0 +1,138 @@
+"""Prefix-sharing fork engine for crash-point sweeps.
+
+All crash points of one (workload, strategy) pair share an identical
+execution prefix — re-running it per cell is what made dense
+recompute-vs-crash-point curves (paper figs 3/7/10-12, EasyCrash-style
+batches of thousands of crash instances) O(cells × full run). This
+engine is the WITCHER-style record/fork alternative: run the pair
+forward ONCE, capture a snapshot at the sorted union of every plan's
+crash points, then evaluate each cell by restoring its snapshot —
+crash, recover, and execute only the tail. Cost per cell drops from
+O(setup + prefix + tail) to O(restore + tail).
+
+Snapshots capture the whole observable state: the emulator (truth
+arrays, NVM image, volatile-cache occupancy/dirtiness/recency, traffic
+stats incl. the float ``modeled_seconds``), host-side workload scalars,
+and mechanism state (open undo-log transaction, checkpoint area, commit
+counters). A forked tail therefore replays the exact trace the rerun
+engine's tail would, and cells come out identical field-for-field
+(``wall_seconds`` aside) — enforced by tests/test_scenarios.py and the
+``sweep_timing`` benchmark's divergence check.
+
+Correctness requirement: ``Workload.step(i)`` must be deterministic in
+(state, i) — true for all three adapters (XSBench sampling is
+counter-based SplitMix64 precisely so restarted runs replay the same
+lookups, matching the paper's methodology).
+
+Not public API — use ``repro.scenarios.sweep(engine="fork")``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .crashplan import CrashPlan, CrashPoint
+from .driver import ScenarioResult, _finish
+from .strategies import ConsistencyStrategy
+from .workloads import Workload
+
+__all__ = ["run_pair_forked"]
+
+
+class _CellSnapshot:
+    """State at one potential crash position, plus the timing of its
+    (possibly partial — torn) final step."""
+
+    __slots__ = ("wl_snap", "strat_snap", "wall_last", "modeled_last")
+
+    def __init__(self, wl: Workload, strat: ConsistencyStrategy,
+                 wall_last: float, modeled_last: float):
+        self.wl_snap = wl.snapshot()
+        self.strat_snap = strat.snapshot()
+        self.wall_last = wall_last
+        self.modeled_last = modeled_last
+
+    def restore(self, wl: Workload, strat: ConsistencyStrategy) -> None:
+        wl.restore_snapshot(self.wl_snap)
+        strat.restore_snapshot(self.strat_snap)
+
+
+def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
+                    grounded: Sequence[Tuple[CrashPlan, List[CrashPoint]]],
+                    progress=None) -> List[ScenarioResult]:
+    """Evaluate every cell of one set-up (workload, strategy) pair.
+
+    ``grounded`` is the pre-resolved [(plan, [CrashPoint...]), ...] for
+    this pair. Returns ScenarioResults in plan-major, point-minor order
+    — the same order the rerun engine emits.
+    """
+    strat.attach(wl)
+    emu = wl.emu
+    n = wl.n_steps
+
+    # the union of snapshot positions all plans need; (None, False) is
+    # the completed-run state no_crash cells finalize from
+    want = set()
+    for _plan, points in grounded:
+        for p in points:
+            want.add((p.step, p.torn) if p.step is not None
+                     else (None, False))
+
+    # -- golden forward pass: one shared prefix execution -----------------
+    need_full = (None, False) in want
+    last_point = max((s for s, _ in want if s is not None), default=-1)
+    snaps: Dict[Tuple[Optional[int], bool], _CellSnapshot] = {}
+    wall: List[float] = []
+    modeled: List[float] = []
+    for i in range(n):
+        ts = time.perf_counter()
+        m0 = emu.modeled_seconds()
+        strat.before_step(i)
+        wl.step(i)
+        if (i, True) in want:   # torn: before the persistence hook
+            torn_wall = time.perf_counter() - ts
+            snaps[(i, True)] = _CellSnapshot(
+                wl, strat, torn_wall, emu.modeled_seconds() - m0)
+            # keep capture cost out of the step's recorded duration
+            ts = time.perf_counter() - torn_wall
+        strat.after_step(i)
+        wall.append(time.perf_counter() - ts)
+        modeled.append(emu.modeled_seconds() - m0)
+        if (i, False) in want:
+            snaps[(i, False)] = _CellSnapshot(wl, strat, wall[-1],
+                                              modeled[-1])
+        if not need_full and i == last_point:
+            break   # no plan needs the completed-run state
+    if need_full:
+        # captured BEFORE any finalize(): finalize may charge traffic
+        # (CG reads z), and each no_crash cell must pay it exactly once
+        snaps[(None, False)] = _CellSnapshot(wl, strat, 0.0, 0.0)
+
+    # -- fork one cell per (plan, point) ----------------------------------
+    results: List[ScenarioResult] = []
+    for plan, points in grounded:
+        for point in points:
+            t0 = time.perf_counter()
+            if point.step is None:
+                snap = snaps[(None, False)]
+                snap.restore(wl, strat)
+                res = _finish(wl, strat, point, plan.describe(),
+                              recover=True, crashed=False,
+                              wall_durs=wall, modeled_durs=modeled, t0=t0)
+            else:
+                snap = snaps[(point.step, point.torn)]
+                snap.restore(wl, strat)
+                # prefix timings come from the golden run; the last
+                # step's entry is partial for torn crashes, matching
+                # what the rerun engine's broken-off loop records
+                s = point.step
+                res = _finish(
+                    wl, strat, point, plan.describe(),
+                    recover=True, crashed=True,
+                    wall_durs=wall[:s] + [snap.wall_last],
+                    modeled_durs=modeled[:s] + [snap.modeled_last], t0=t0)
+            results.append(res)
+            if progress is not None:
+                progress(res)
+    return results

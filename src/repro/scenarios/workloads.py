@@ -138,7 +138,32 @@ class Workload(abc.ABC):
         used after an undo-log rollback mutates the image post-crash."""
         emu = self.emu
         for r in self.live_regions():
-            emu.truth_flat(r.name)[:] = emu.store.image[r.name]
+            emu.resync_truth(r.name)
+
+    # -- snapshot / fork ---------------------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """Capture the complete mid-run state for the fork sweep engine:
+        the emulator snapshot (every region's truth + NVM image + cache
+        state + traffic stats) plus host-side scalars (``scalar_state``,
+        e.g. CG's rho). Restorable any number of times.
+
+        This is sufficient for all three adapters because every state
+        array (CG's versioned p/q/r/z, MM's C_s/C_temp and counters,
+        XSBench's macro vector / counters / loop index) lives in
+        emulator regions, and sampling is counter-based (SplitMix64 of
+        the step index), so there is no live RNG state to carry.
+        Workload.step must stay deterministic in (state, i) for forked
+        tails to replay exactly — see README "Sweep engine"."""
+        return {"emu": self.emu.snapshot(),
+                "scalars": dict(self.scalar_state())}
+
+    def restore_snapshot(self, snap: Dict[str, object]) -> None:
+        """Reset to a :meth:`snapshot` taken on this instance (in-place:
+        regions and the emulator keep their identity)."""
+        self.emu.restore(snap["emu"])
+        scalars = snap["scalars"]
+        if scalars:
+            self.restore_scalars(dict(scalars))
 
     # -- ADCC hooks -------------------------------------------------------------
     def adcc_before_step(self, i: int) -> None:

@@ -8,6 +8,12 @@ can diverge: caches a few lines big (constant eviction pressure, the
 intra-op dynamic-miss interleaving), sector weights > 1, partial last
 entries, multi-region interleaving, and spans from single elements to
 whole regions. Deterministic seeds, no hypothesis dependency.
+
+The snapshot/restore tests extend the same randomized machinery to the
+fork protocol: a suffix trace replayed after ``restore()`` must land in
+a state bit-identical (traffic stats incl. modeled seconds, NVM images,
+dirty sets, truth) to a from-scratch replay of prefix+suffix — on both
+backends, across repeated restores of the same snapshot.
 """
 
 import dataclasses
@@ -102,6 +108,142 @@ def _run_trace(seed: int, replacement: str, n_ops: int = 120) -> None:
 @pytest.mark.parametrize("seed", range(25))
 def test_randomized_trace_equivalence(seed, replacement):
     _run_trace(seed, replacement)
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore: fork protocol equivalence (PR 3)
+# ---------------------------------------------------------------------------
+
+def _make_trace(seed, n_ops=120):
+    """Deterministic (cfg kwargs, region specs, op list) so the same
+    trace can be replayed on any number of fresh or restored emulators.
+    Ops mirror the randomized-equivalence mix, minus reads' return-value
+    checks (truth equality is part of the state fingerprint)."""
+    rng = np.random.default_rng(seed)
+    cache_lines = int(rng.integers(1, 10))
+    line_bytes = int(rng.choice([32, 64]))
+    cfg = dict(cache_bytes=cache_lines * line_bytes, line_bytes=line_bytes,
+               replacement=("lru", "fifo")[seed % 2])
+    specs = []
+    for i in range(int(rng.integers(2, 5))):
+        n = int(rng.integers(1, 600))
+        dtype = [np.float64, np.int32, np.int64][int(rng.integers(0, 3))]
+        sector = int(rng.choice([1, 1, 2, 4]))
+        specs.append((f"r{i}", n, dtype, sector))
+    ops = []
+    for _ in range(n_ops):
+        name, n, dtype, _ = specs[int(rng.integers(0, len(specs)))]
+        p = rng.random()
+        if p < 0.45:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            ops.append(("write", name, lo, hi,
+                        rng.integers(0, 1000, size=hi - lo).astype(dtype)))
+        elif p < 0.75:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            ops.append(("read", name, lo, hi, None))
+        elif p < 0.90:
+            if rng.random() < 0.5:
+                ops.append(("flush", name, 0, n, None))
+            else:
+                lo = int(rng.integers(0, n))
+                hi = int(rng.integers(lo + 1, n + 1))
+                ops.append(("flush", name, lo, hi, None))
+        elif p < 0.96:
+            ops.append(("crash", None, 0, 0, None))
+        else:
+            ops.append(("drain", None, 0, 0, None))
+    return cfg, specs, ops
+
+
+def _build(backend, cfg, specs):
+    emu = CrashEmulator(NVMConfig(backend=backend, **cfg))
+    regions = {name: emu.alloc(name, (n,), dtype, sector_lines=sector)
+               for name, n, dtype, sector in specs}
+    return emu, regions
+
+
+def _apply(emu, regions, ops):
+    for kind, name, lo, hi, val in ops:
+        if kind == "write":
+            regions[name][lo:hi] = val
+        elif kind == "read":
+            regions[name][lo:hi]
+        elif kind == "flush":
+            regions[name].flush(slice(lo, hi))
+        elif kind == "crash":
+            emu.crash()
+        else:
+            emu.drain()
+
+
+def _state(emu, specs):
+    """Full observable state: stats (incl. float modeled seconds), NVM
+    images, truth arrays, dirty sets, occupancy, crashed flag."""
+    return (dataclasses.astuple(emu.stats),
+            tuple(emu.store.image[name].tobytes() for name, *_ in specs),
+            tuple(emu.truth_flat(name).tobytes() for name, *_ in specs),
+            tuple(emu.backend.dirty_entries(name).tobytes()
+                  for name, *_ in specs),
+            emu.backend.occupancy_lines,
+            emu.crashed)
+
+
+@pytest.mark.parametrize("backend", ["reference", "vectorized"])
+@pytest.mark.parametrize("seed", range(10))
+def test_snapshot_restore_matches_scratch_replay(seed, backend):
+    cfg, specs, ops = _make_trace(seed)
+    cut = len(ops) // 2
+    emu, regions = _build(backend, cfg, specs)
+    _apply(emu, regions, ops[:cut])
+    snap = emu.snapshot()
+    mid_state = _state(emu, specs)
+    _apply(emu, regions, ops[cut:])
+    end_state = _state(emu, specs)
+
+    # restore rewinds to the capture point exactly
+    emu.restore(snap)
+    assert _state(emu, specs) == mid_state
+
+    # a replayed suffix lands bit-identical to the straight-through run
+    _apply(emu, regions, ops[cut:])
+    assert _state(emu, specs) == end_state
+
+    # ... and to a from-scratch replay of prefix+suffix
+    emu2, regions2 = _build(backend, cfg, specs)
+    _apply(emu2, regions2, ops)
+    assert _state(emu2, specs) == end_state
+
+    # snapshots are immutable: a second restore of the same snapshot
+    # still reproduces the capture point
+    emu.restore(snap)
+    assert _state(emu, specs) == mid_state
+
+
+@pytest.mark.parametrize("backend", ["reference", "vectorized"])
+def test_snapshot_capture_does_not_perturb_trace(backend):
+    """Interleaving snapshot() captures into a running trace must not
+    change any observable state vs the same trace without captures."""
+    cfg, specs, ops = _make_trace(3, n_ops=80)
+    plain, plain_regions = _build(backend, cfg, specs)
+    _apply(plain, plain_regions, ops)
+    snapped, snapped_regions = _build(backend, cfg, specs)
+    for i, op in enumerate(ops):
+        _apply(snapped, snapped_regions, [op])
+        if i % 7 == 0:
+            snapped.snapshot()
+    assert _state(snapped, specs) == _state(plain, specs)
+
+
+def test_restore_into_wrong_emulator_raises():
+    cfg, specs, ops = _make_trace(1, n_ops=10)
+    emu, regions = _build("vectorized", cfg, specs)
+    snap = emu.snapshot()
+    other = CrashEmulator(NVMConfig(backend="vectorized", **cfg))
+    other.alloc("unrelated", (8,))
+    with pytest.raises(ValueError):
+        other.restore(snap)
 
 
 @pytest.mark.parametrize("replacement", ["lru", "fifo"])

@@ -21,8 +21,10 @@ from repro.core import abft
 from repro.core.nvm import NVMConfig
 from repro.scenarios import (
     STRATEGIES,
+    WALL_CLOCK_FIELDS,
     CrashPlan,
     cg_step_profile,
+    deterministic_cell_dict,
     make_strategy,
     make_workload,
     mechanism_cases,
@@ -270,6 +272,95 @@ class TestSweep:
         payload = json.loads(out.read_text())
         assert len(payload["skipped"]) == 3
         assert all(s["plan"] == "phase:loop2:0" for s in payload["skipped"])
+
+
+class TestForkEngine:
+    """The prefix-sharing fork engine must be observationally identical
+    to from-scratch reruns: cell-for-cell equal deterministic payloads
+    on matrices covering every strategy, torn crashes, batch plans, and
+    phase-grounded plans."""
+
+    WLS = (("cg", {"n": 512, "iters": 8, "seed": 3}),
+           ("mm", {"n": 32, "k": 8, "seed": 1}),
+           ("xsbench", {"lookups": 200, "grid_points": 400, "n_nuclides": 8,
+                        "n_materials": 6, "max_nuclides_per_material": 4,
+                        "flush_every_frac": 0.05, "seed": 7}))
+    PLANS = (CrashPlan.no_crash(), CrashPlan.at_fraction(0.5),
+             CrashPlan.at_fraction(0.8, torn=True),
+             CrashPlan.random(count=2, seed=1),
+             CrashPlan.at_phase("loop2", 1))
+
+    def test_fork_equals_rerun_cell_for_cell(self):
+        kw = dict(workloads=self.WLS, strategies=ALL_STRATEGIES,
+                  plans=self.PLANS, cfg=SMALL)
+        rerun = sweep(engine="rerun", **kw)
+        fork = sweep(engine="fork", **kw)
+        assert len(rerun) == len(fork) > 0
+        for a, b in zip(rerun, fork):
+            da, db = deterministic_cell_dict(a), deterministic_cell_dict(b)
+            assert da == db, (a.workload, a.strategy, a.plan, a.crash_step)
+        # wall-derived fields exist but are excluded from the contract
+        assert set(WALL_CLOCK_FIELDS) <= set(rerun[0].to_json_dict())
+
+    def test_fork_skips_same_ungroundable_cells(self, tmp_path):
+        out_fork = tmp_path / "fork.json"
+        out_rerun = tmp_path / "rerun.json"
+        kw = dict(workloads=(CG, MM), strategies=("none", "adcc"),
+                  plans=(CrashPlan.at_phase("loop2", 0),), cfg=SMALL)
+        fork = sweep(engine="fork", out_json=str(out_fork), **kw)
+        rerun = sweep(engine="rerun", out_json=str(out_rerun), **kw)
+        assert [deterministic_cell_dict(c) for c in fork] == \
+            [deterministic_cell_dict(c) for c in rerun]
+        skipped_fork = json.loads(out_fork.read_text())["skipped"]
+        skipped_rerun = json.loads(out_rerun.read_text())["skipped"]
+        assert skipped_fork == skipped_rerun and len(skipped_fork) == 3
+
+    def test_at_every_step_is_exhaustive(self):
+        wl = make_workload(CG)
+        wl.setup(SMALL, "adcc")
+        points = CrashPlan.at_every_step().resolve(wl)
+        assert [p.step for p in points] == list(range(wl.n_steps))
+        assert CrashPlan.at_every_step(torn=True).describe() == "every:torn"
+
+    def test_dense_every_step_sweep_forked(self):
+        cells = sweep(workloads=(CG,), strategies=("adcc",),
+                      plans=(CrashPlan.at_every_step(),), cfg=SMALL,
+                      engine="fork")
+        assert [c.crash_step for c in cells] == list(range(8))
+        assert all(c.correct for c in cells)
+
+    def test_unknown_engine_raises(self):
+        with pytest.raises(ValueError):
+            sweep(workloads=(CG,), strategies=("none",), engine="exec")
+
+    def test_snapshot_restore_roundtrip_mid_run(self):
+        """Workload+strategy snapshot at step k resumes to the same
+        final answer and traffic as an uninterrupted run."""
+        wl = make_workload(CG)
+        wl.setup(SMALL, "adcc")
+        strat = make_strategy("adcc")
+        strat.attach(wl)
+        for i in range(4):
+            strat.before_step(i)
+            wl.step(i)
+            strat.after_step(i)
+        snap, ssnap = wl.snapshot(), strat.snapshot()
+        for i in range(4, wl.n_steps):
+            strat.before_step(i)
+            wl.step(i)
+            strat.after_step(i)
+        direct = wl.finalize()
+        traffic = wl.emu.stats.nvm_bytes_written
+
+        wl.restore_snapshot(snap)
+        strat.restore_snapshot(ssnap)
+        for i in range(4, wl.n_steps):
+            strat.before_step(i)
+            wl.step(i)
+            strat.after_step(i)
+        replay = wl.finalize()
+        assert np.array_equal(replay.info["z"], direct.info["z"])
+        assert wl.emu.stats.nvm_bytes_written == traffic
 
 
 class TestCostModel:
