@@ -48,6 +48,22 @@ def emit(rows: List[Row], save_as: Optional[str] = None) -> None:
         write_json(os.path.join(ART, save_as), rows_to_records(rows))
 
 
+def dense_figure_cli(run_fn: Callable, artifact: str, argv=None) -> None:
+    """Shared ``__main__`` entry for the dense-matrix figure suites
+    (fig3/fig7): ``--smoke`` + ``--workers`` flags over a
+    ``run(smoke=, workers=)`` suite function."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI size axis (gates run at every size)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="processes for the sweep "
+                         "(default: REPRO_SWEEP_WORKERS or 2)")
+    args = ap.parse_args(argv)
+    emit(run_fn(smoke=args.smoke or None, workers=args.workers),
+         save_as=artifact)
+
+
 def timeit(fn: Callable, repeats: int = 3) -> float:
     """Best-of wall time."""
     best = float("inf")

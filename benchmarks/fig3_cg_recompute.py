@@ -1,48 +1,111 @@
 """Paper Fig. 3: CG recomputation cost vs input problem size.
 
 A declarative scenario matrix over the unified driver: ADCC strategy,
-crash at a fixed iteration, problem size swept. Reported: recomputation
-time (detect + resume) normalized by the average per-iteration time, and
-the number of iterations lost — small problems fit in cache and lose
-everything, large problems lose ~1 iteration.
+problem size swept, and — unlike the paper's fixed crash iteration —
+EVERY crash step enumerated via ``CrashPlan.at_every_step()`` through
+``sweep(mode="measure")``: each cell forks from its snapshot, crashes,
+runs ADCC recovery, and computes the recompute fields from the
+recovered state (no tail re-execution), so the exhaustive curve costs
+O(restore + recover) per crash point. Reported per (size, crash step):
+iterations lost and the recomputation time (detect + resume) normalized
+by the average per-iteration time, plus per-size mean/worst aggregates
+— small problems fit in cache and lose everything, large problems lose
+~1 iteration.
+
+Every run — ``--smoke`` (the CI size axis) or full — passes the
+dense-matrix gates (``scenarios_sweep.check_dense_gates``): the
+parallel (``--workers``) sweep must merge to the identical cell list
+as the serial one, and every measure-mode field must match the
+full-execution fork engine. The gate's full-execution sweep is also
+where crashed cells' end-of-run correctness gets checked (measure
+cells carry correct=None by design): asserted strictly at smoke sizes;
+at full sizes ADCC CG's invariant-scan restart is *approximately*
+consistent (the paper's iterative-method tolerance argument) and the
+handful of cells off the strict 1e-7 criterion are reported as the
+``incorrect_full_cells`` row instead.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import CrashPlan, run_scenario
+from repro.scenarios import CrashPlan, sweep
 
-from .common import Row, emit
+from .common import Row
 
 ARTIFACT = "fig3_cg_recompute.json"
 
 SIZES = [2048, 8192, 32768, 131072]   # paper: classes S, W, A, B/C
 ITERS = 16
-CRASH_AT = 14
+SMOKE_SIZES = [1024, 4096]
+SMOKE_ITERS = 10
+
+PLANS = (CrashPlan.no_crash(), CrashPlan.at_every_step())
 
 
-def run() -> List[Row]:
-    cfg = NVMConfig(cache_bytes=2 * 1024 * 1024)
-    rows = []
-    for n in SIZES:
-        res = run_scenario(("cg", {"n": n, "iters": ITERS, "seed": n}),
-                           "adcc", CrashPlan.at_step(CRASH_AT), cfg=cfg)
-        norm = ((res.detect_seconds + res.resume_seconds)
-                / max(res.avg_step_seconds, 1e-12))
-        rows.append(Row(f"fig3/cg_recompute/n={n}/iters_lost",
-                        res.steps_lost,
-                        f"restart_iter={res.restart_point}"))
-        rows.append(Row(f"fig3/cg_recompute/n={n}/normalized_recompute",
-                        norm,
-                        f"detect={res.detect_seconds:.4f}s "
-                        f"resume={res.resume_seconds:.4f}s"))
+def _workloads(sizes: Sequence[int], iters: int) -> Tuple:
+    return tuple(("cg", {"n": n, "iters": iters, "seed": n}) for n in sizes)
+
+
+def _cfg() -> NVMConfig:
+    return NVMConfig(cache_bytes=2 * 1024 * 1024)
+
+
+def _sweep_kw(smoke: bool) -> Dict:
+    sizes, iters = (SMOKE_SIZES, SMOKE_ITERS) if smoke else (SIZES, ITERS)
+    return dict(workloads=_workloads(sizes, iters), strategies=("adcc",),
+                plans=PLANS, cfg=_cfg())
+
+
+def run(smoke: bool = None, workers: int = None) -> List[Row]:
+    from .scenarios_sweep import check_dense_gates, resolve_sweep_env
+
+    smoke, workers = resolve_sweep_env(smoke, workers)
+    kw = _sweep_kw(smoke)
+    cells = sweep(mode="measure", workers=workers, **kw)
+    # parallel==serial and measure==fork gate at EVERY size; the strict
+    # per-cell correctness assert only at smoke sizes — at full sizes
+    # ADCC CG's approximate invariant-scan restart leaves a few cells
+    # ~1e-5 off the 1e-7 criterion (seed-algorithm property, reported
+    # below as incorrect_full_cells)
+    incorrect = check_dense_gates(kw, cells, workers, strict_correct=smoke)
+
+    rows = [Row("fig3/cg_recompute/incorrect_full_cells", len(incorrect),
+                "full-execution cells off the strict 1e-7 criterion")]
+    for spec in kw["workloads"]:
+        n = spec[1]["n"]
+        mine = [c for c in cells if c.workload_params.get("n") == n]
+        baseline = [c for c in mine if c.crash_step is None]
+        assert baseline and all(c.correct for c in baseline), \
+            (n, "no_crash baseline must finalize correct")
+        crashed = [c for c in mine if c.crash_step is not None]
+        assert [c.crash_step for c in crashed] == list(
+            range(spec[1]["iters"])), (n, "dense curve must be exhaustive")
+        norms = []
+        for c in crashed:
+            norm = ((c.detect_seconds + c.resume_seconds)
+                    / max(c.avg_step_seconds, 1e-12))
+            norms.append(norm)
+            rows.append(Row(
+                f"fig3/cg_recompute/n={n}/crash={c.crash_step}/iters_lost",
+                c.steps_lost,
+                f"restart={c.restart_point} class={c.correctness_class}"))
+            rows.append(Row(
+                f"fig3/cg_recompute/n={n}/crash={c.crash_step}"
+                f"/normalized_recompute",
+                norm, f"detect={c.detect_seconds:.4f}s"))
+        rows.append(Row(f"fig3/cg_recompute/n={n}/mean_iters_lost",
+                        sum(c.steps_lost for c in crashed) / len(crashed),
+                        f"crash_points={len(crashed)}"))
+        rows.append(Row(f"fig3/cg_recompute/n={n}/worst_normalized_recompute",
+                        max(norms), "over every crash step"))
     return rows
 
 
-def main() -> None:
-    emit(run(), save_as=ARTIFACT)
+def main(argv=None) -> None:
+    from .common import dense_figure_cli
+    dense_figure_cli(run, ARTIFACT, argv)
 
 
 if __name__ == "__main__":

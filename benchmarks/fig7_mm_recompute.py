@@ -1,46 +1,103 @@
 """Paper Fig. 7: ABFT-MM recomputation cost for crashes in loop 1
 (submatrix multiplication) and loop 2 (submatrix addition), across
 matrix sizes — a declarative scenario matrix (ADCC strategy ×
-per-phase crash plans). Expect: large matrices lose <= 1 chunk/row-block."""
+``CrashPlan.at_every_step()``), so BOTH loops are enumerated at every
+crash step rather than sampled at one index per loop. Runs through
+``sweep(mode="measure")``: each cell is restore + crash + ADCC recovery
+(which itself recomputes the lost chunks/blocks — that IS the measured
+cost), with no tail re-execution. Expect: large matrices lose <= 1
+chunk/row-block at every crash point.
+
+``--smoke`` shrinks the size axis for CI; every run — smoke or full —
+passes the dense-matrix gates (parallel==serial, every full-execution
+cell correct, measure==fork) — ``scenarios_sweep.check_dense_gates``.
+"""
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import CrashPlan, run_scenario
+from repro.scenarios import CrashPlan, make_workload, sweep
 
-from .common import Row, emit
+from .common import Row
 
 ARTIFACT = "fig7_mm_recompute.json"
 
 SIZES = [256, 512, 768, 1024]
-CRASH_INDEX = 2
+SMOKE_SIZES = [64, 128]
+
+PLANS = (CrashPlan.no_crash(), CrashPlan.at_every_step())
 
 
-def run() -> List[Row]:
-    cfg = NVMConfig(cache_bytes=4 * 1024 * 1024)
+def _workloads(sizes: Sequence[int]) -> Tuple:
+    return tuple(("mm", {"n": n, "k": n // 4, "seed": n}) for n in sizes)
+
+
+def _cfg() -> NVMConfig:
+    return NVMConfig(cache_bytes=4 * 1024 * 1024)
+
+
+def _sweep_kw(smoke: bool) -> Dict:
+    sizes = SMOKE_SIZES if smoke else SIZES
+    return dict(workloads=_workloads(sizes), strategies=("adcc",),
+                plans=PLANS, cfg=_cfg())
+
+
+def _phase_of(spec, cfg: NVMConfig) -> Dict[int, str]:
+    """step index -> "loop1"/"loop2" for one adcc-mode MM workload."""
+    probe = make_workload(spec)
+    probe.setup(cfg, "adcc")
+    return {s: name for name, rng in probe.phases().items() for s in rng}
+
+
+def run(smoke: bool = None, workers: int = None) -> List[Row]:
+    from .scenarios_sweep import check_dense_gates, resolve_sweep_env
+
+    smoke, workers = resolve_sweep_env(smoke, workers)
+    kw = _sweep_kw(smoke)
+    cells = sweep(mode="measure", workers=workers, **kw)
+    # all gates at every size; ABFT recovery is exact (checksum
+    # correction, not approximate restart), so the strict correctness
+    # assert holds at full sizes too — unlike fig3
+    check_dense_gates(kw, cells, workers, strict_correct=True)
+
     rows = []
-    for n in SIZES:
-        for loop in ("loop1", "loop2"):
-            res = run_scenario(("mm", {"n": n, "k": n // 4, "seed": n}),
-                               "adcc", CrashPlan.at_phase(loop, CRASH_INDEX),
-                               cfg=cfg)
-            assert res.correct, (n, loop, res.metrics)
-            norm = ((res.detect_seconds + res.resume_seconds)
-                    / max(res.avg_step_seconds, 1e-12))
-            rows.append(Row(f"fig7/mm_recompute/n={n}/{loop}/chunks_lost",
-                            res.info["chunks_lost"],
-                            f"corrected={res.info['corrected_elements']} "
-                            f"err={res.metrics['max_error']:.1e}"))
+    for spec in kw["workloads"]:
+        n = spec[1]["n"]
+        phase_of = _phase_of(spec, kw["cfg"])
+        mine = [c for c in cells if c.workload_params.get("n") == n]
+        baseline = [c for c in mine if c.crash_step is None]
+        assert baseline and all(c.correct for c in baseline), \
+            (n, "no_crash baseline must finalize correct")
+        crashed = [c for c in mine if c.crash_step is not None]
+        assert [c.crash_step for c in crashed] == sorted(phase_of), \
+            (n, "dense curve must cover every step of both loops")
+        by_loop: Dict[str, List[float]] = {"loop1": [], "loop2": []}
+        for c in crashed:
+            loop = phase_of[c.crash_step]
+            norm = ((c.detect_seconds + c.resume_seconds)
+                    / max(c.avg_step_seconds, 1e-12))
+            by_loop[loop].append(c.steps_lost)
             rows.append(Row(
-                f"fig7/mm_recompute/n={n}/{loop}/normalized_recompute",
-                norm, f"detect={res.detect_seconds:.4f}s"))
+                f"fig7/mm_recompute/n={n}/{loop}/crash={c.crash_step}"
+                f"/chunks_lost",
+                c.steps_lost,
+                f"class={c.correctness_class} "
+                f"corrected={c.info.get('corrected_elements', 0)}"))
+            rows.append(Row(
+                f"fig7/mm_recompute/n={n}/{loop}/crash={c.crash_step}"
+                f"/normalized_recompute",
+                norm, f"detect={c.detect_seconds:.4f}s"))
+        for loop, lost in by_loop.items():
+            rows.append(Row(f"fig7/mm_recompute/n={n}/{loop}/max_chunks_lost",
+                            max(lost), f"crash_points={len(lost)}"))
     return rows
 
 
-def main() -> None:
-    emit(run(), save_as=ARTIFACT)
+def main(argv=None) -> None:
+    from .common import dense_figure_cli
+    dense_figure_cli(run, ARTIFACT, argv)
 
 
 if __name__ == "__main__":

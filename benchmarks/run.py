@@ -6,20 +6,22 @@ writes every suite's rows as one machine-readable artifact.
     python -m benchmarks.run fig4 fig8 fig13      # just these
     python -m benchmarks.run --backend reference scenarios
 
-  fig3      CG recomputation vs problem size          (paper Fig. 3)
+  fig3      CG recomputation, every crash step        (paper Fig. 3)
   fig4      CG runtime, 7 mechanisms                  (paper Fig. 4)
-  fig7      ABFT-MM recomputation, both loops         (paper Fig. 7)
+  fig7      ABFT-MM recomputation, every crash step   (paper Fig. 7)
   fig8      ABFT-MM runtime vs rank, 7 mechanisms     (paper Fig. 8)
   fig10_12  MC correctness basic vs selective restart (paper Figs. 10+12)
   fig13     MC runtime, 7 mechanisms                  (paper Fig. 13)
   scenarios workload x strategy x crash-point sweep   (BENCH_scenarios.json)
-  sweep     fork-vs-rerun sweep-engine timing + gate  (BENCH_sweep.json)
+  sweep     rerun/fork/measure sweep timing + gates   (BENCH_sweep.json)
   train     training-loop ADCC vs sync checkpoint     (beyond-paper)
   kernel    ABFT matmul fused-checksum overhead       (kernel-level)
 
 Suites construct their NVMConfigs lazily (inside ``run()``), so
 ``--backend`` / ``REPRO_NVM_BACKEND`` can never be snapshotted at import
-time and silently ignored.
+time and silently ignored. ``--smoke`` / ``--workers`` export
+``REPRO_SCENARIOS_SMOKE`` / ``REPRO_SWEEP_WORKERS`` the same way, for
+the suites that sweep scenario matrices (fig3, fig7, scenarios, sweep).
 
 Roofline (reads dry-run artifacts): ``python -m benchmarks.roofline``.
 """
@@ -63,9 +65,19 @@ def main() -> None:
                          "(default: NVMConfig's default, i.e. vectorized)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all executed suites' rows to PATH as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized scenario matrices "
+                         "(exports REPRO_SCENARIOS_SMOKE=1)")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="processes for scenario sweeps "
+                         "(exports REPRO_SWEEP_WORKERS)")
     args = ap.parse_args()
     if args.backend:
         os.environ["REPRO_NVM_BACKEND"] = args.backend
+    if args.smoke:
+        os.environ["REPRO_SCENARIOS_SMOKE"] = "1"
+    if args.workers is not None:
+        os.environ["REPRO_SWEEP_WORKERS"] = str(args.workers)
     unknown = [s for s in args.suites if s not in SUITES]
     if unknown:
         ap.error(f"unknown suite(s) {unknown}; choose from {SUITE_NAMES}")

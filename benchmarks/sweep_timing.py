@@ -1,16 +1,18 @@
-"""Fork-vs-rerun sweep-engine comparison — the ``sweep`` suite.
+"""Sweep execution comparison — the ``sweep`` suite.
 
 Times a dense one-crash-point-per-step matrix (3 workloads × 3
-strategies × (no_crash + at_every_step)) under both sweep engines,
-writes ``BENCH_sweep.json`` with per-engine seconds + speedup, and
-fails if any cell's deterministic payload differs between engines.
+strategies × (no_crash + at_every_step)) under the rerun engine, the
+fork engine, fork + mode="measure", and a pair-sharded parallel measure
+run; writes ``BENCH_sweep.json`` with per-run seconds + speedups, and
+fails on any of the three divergence gates (fork/rerun, measure/fork,
+workers>1/workers=1).
 
     PYTHONPATH=src python -m benchmarks.sweep_timing            # full
     PYTHONPATH=src python -m benchmarks.sweep_timing --smoke    # CI
 
 The matrix definitions and comparison logic live in
-benchmarks/scenarios_sweep.py (``fork_vs_rerun_timing`` /
-``run_timing``); this module is the registered suite entry point.
+benchmarks/scenarios_sweep.py (``engine_timing`` / ``run_timing``);
+this module is the registered suite entry point.
 """
 
 from __future__ import annotations
@@ -23,8 +25,8 @@ from .scenarios_sweep import BENCH_SWEEP_JSON, run_timing  # noqa: F401
 ARTIFACT = "sweep_timing.json"
 
 
-def run(smoke: bool = None) -> List[Row]:
-    return run_timing(smoke)
+def run(smoke: bool = None, workers: int = None) -> List[Row]:
+    return run_timing(smoke, workers)
 
 
 if __name__ == "__main__":
@@ -32,5 +34,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized dense matrix")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="processes for the sharded run "
+                         "(default: REPRO_SWEEP_WORKERS or 2)")
     args = ap.parse_args()
-    emit(run(smoke=args.smoke or None), save_as=ARTIFACT)
+    emit(run(smoke=args.smoke or None, workers=args.workers),
+         save_as=ARTIFACT)

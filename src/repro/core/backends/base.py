@@ -131,3 +131,10 @@ class MemoryBackend(Protocol):
     def dirty_entries(self, name: str) -> np.ndarray:
         """Sorted entry indices of ``name`` currently dirty in cache."""
         ...
+
+    def has_dirty(self, name: str) -> bool:
+        """Whether ANY entry of ``name`` is dirty in cache — the cheap
+        predicate crash() uses per region per cell (dense measure-mode
+        sweeps crash thousands of times; materializing the index array
+        of every clean region there is pure waste)."""
+        ...

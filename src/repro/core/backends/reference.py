@@ -194,3 +194,6 @@ class ReferenceLRUBackend:
     def dirty_entries(self, name: str) -> np.ndarray:
         out = sorted(e for (n, e), d in self._lru.items() if n == name and d)
         return np.asarray(out, dtype=np.int64)
+
+    def has_dirty(self, name: str) -> bool:
+        return any(d for (n, _e), d in self._lru.items() if n == name)

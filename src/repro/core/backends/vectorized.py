@@ -436,3 +436,7 @@ class VectorizedBackend:
     def dirty_entries(self, name: str) -> np.ndarray:
         r = self._regions[name]
         return np.flatnonzero(r.present & r.dirty).astype(np.int64)
+
+    def has_dirty(self, name: str) -> bool:
+        r = self._regions[name]
+        return bool(np.any(r.present & r.dirty))

@@ -231,6 +231,9 @@ class EmuSnapshot:
     stats: TrafficStats
     backend: object
     crashed: bool
+    # regions with a rollback-induced truth/image divergence pending at
+    # capture time (empty in normal step-boundary snapshots)
+    truth_desynced: frozenset = frozenset()
 
 
 class CrashEmulator:
@@ -257,6 +260,10 @@ class CrashEmulator:
         # copy-on-write caches: name -> (epoch, frozen copy at that epoch)
         self._cow_truth: Dict[str, Tuple[int, np.ndarray]] = {}
         self._cow_image: Dict[str, Tuple[int, np.ndarray]] = {}
+        # regions whose image was mutated from data NOT sourced from
+        # truth (undo-log rollback): truth != image there even with a
+        # clean cache, so crash() must reload them (see crash())
+        self._truth_desynced: set = set()
         self.crashed = False
 
     # back-compat: the pre-backend attribute name for the cache layer
@@ -287,6 +294,7 @@ class CrashEmulator:
         self._truth_epoch.pop(name, None)
         self._cow_truth.pop(name, None)
         self._cow_image.pop(name, None)
+        self._truth_desynced.discard(name)
 
     # program-visible operations (facade over the backend) --------------------
     def write(self, name: str, lo: int, hi: int) -> None:
@@ -310,15 +318,21 @@ class CrashEmulator:
     def crash(self) -> int:
         """Drop the volatile cache; reload every truth array from the NVM
         image (the program must now see only what survived)."""
-        # truth diverges from the image exactly where unwritten-back dirty
-        # entries sit, so only those regions' contents actually change here
+        # truth diverges from the image exactly where unwritten-back
+        # dirty entries sit — plus any region whose image was rewritten
+        # from non-truth data (undo-log rollback; see
+        # note_image_divergence). Reloading only those regions makes a
+        # crash O(diverged footprint), which dense measure-mode sweeps
+        # (one crash per cell) rely on when big read-only inputs sit in
+        # the emulator.
         changed = [name for name in self._truth
-                   if self.backend.dirty_entries(name).size]
+                   if name in self._truth_desynced
+                   or self.backend.has_dirty(name)]
         lost = self.backend.crash()
-        for name, truth in self._truth.items():
-            truth[:] = self.store.image[name]
         for name in changed:
+            self._truth[name][:] = self.store.image[name]
             self._truth_epoch[name] += 1
+        self._truth_desynced.clear()
         self.crashed = True
         return lost
 
@@ -331,6 +345,15 @@ class CrashEmulator:
         so snapshot epochs stay coherent."""
         self._truth[name][:] = self.store.image[name]
         self._truth_epoch[name] += 1
+        self._truth_desynced.discard(name)
+
+    def note_image_divergence(self, name: str) -> None:
+        """Record that ``name``'s NVM image was just rewritten from data
+        NOT sourced from truth (undo-log rollback applying old values):
+        truth != image there despite a clean cache. Without this, the
+        clean-region fast path in :meth:`crash` would skip the reload
+        if a second crash landed before :meth:`resync_truth`."""
+        self._truth_desynced.add(name)
 
     # snapshot / fork ----------------------------------------------------------
     def snapshot(self) -> EmuSnapshot:
@@ -368,6 +391,7 @@ class CrashEmulator:
             stats=self.store.stats.snapshot(),
             backend=self.backend.snapshot(),
             crashed=self.crashed,
+            truth_desynced=frozenset(self._truth_desynced),
         )
 
     def restore(self, snap: EmuSnapshot) -> None:
@@ -392,6 +416,7 @@ class CrashEmulator:
                 self.store.image_epoch[name] += 1
         self.store.stats = snap.stats.snapshot()
         self.backend.restore(snap.backend)
+        self._truth_desynced = set(snap.truth_desynced)
         self.crashed = snap.crashed
 
     def truth_flat(self, name: str) -> np.ndarray:

@@ -71,6 +71,9 @@ class UndoLogTx:
         for name, lo, hi, old in reversed(self._log):
             self._emu.store.image[name][lo:hi] = old
             self._emu.store.mark_image_dirty(name)
+            # the image now holds pre-tx values truth never saw — a
+            # further crash() must reload truth even with a clean cache
+            self._emu.note_image_divergence(name)
             self._emu.store.stats.charge_write(old.nbytes, self._emu.cfg)
         self._log.clear()
 

@@ -32,6 +32,12 @@ Module map:
               (default) shares one prefix run per (workload, strategy)
               pair via snapshots, "rerun" re-executes every cell from
               step 0 (the oracle both must match cell-for-cell).
+              sweep(mode="measure") computes each crashed cell's
+              recompute/restart fields from the recovered state instead
+              of executing the tail (O(restore + recover) per cell);
+              sweep(workers=N) shards the independent (workload,
+              strategy) pairs across N processes with a deterministic
+              pair-major merge.
   sweep_engine the prefix-sharing fork engine: snapshot/restore on
               MemoryBackend + Workload + ConsistencyStrategy makes a
               crash-point batch O(tail) instead of O(full re-run),
@@ -88,10 +94,14 @@ from .strategies import (
 from .driver import (
     AVG_STEP_JITTER_FLOOR,
     DEFAULT_SWEEP_PLANS,
+    FULL_RUN_FIELDS,
     SWEEP_ENGINES,
+    SWEEP_MODES,
     WALL_CLOCK_FIELDS,
     ScenarioResult,
+    classify_recovery,
     deterministic_cell_dict,
+    measure_divergence_fields,
     run_scenario,
     sweep,
     write_scenarios_json,
@@ -108,7 +118,8 @@ __all__ = [
     "UndoLogStrategy", "CheckpointStrategy",
     "make_strategy", "register_strategy", "strategy_names",
     "AVG_STEP_JITTER_FLOOR", "DEFAULT_SWEEP_PLANS", "SWEEP_ENGINES",
-    "WALL_CLOCK_FIELDS", "ScenarioResult", "deterministic_cell_dict",
-    "run_scenario", "sweep",
+    "SWEEP_MODES", "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS",
+    "ScenarioResult", "classify_recovery", "deterministic_cell_dict",
+    "measure_divergence_fields", "run_scenario", "sweep",
     "write_scenarios_json",
 ]

@@ -33,6 +33,7 @@ __all__ = [
     "MECHANISM_CASES",
     "mechanism_cases",
     "mechanism_step_seconds",
+    "persist_events",
     "cg_step_profile",
     "mm_step_profile",
     "xsbench_step_profile",
@@ -81,6 +82,23 @@ def mechanism_step_seconds(strategy: str, profile: StepCostProfile,
         nlines = _lines(profile.adcc_bytes, profile.adcc_lines, line)
         return profile.adcc_bytes / cfg.write_bw + nlines * cfg.flush_latency
     raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def persist_events(steps_run: int, strategy_interval: int,
+                   profile: StepCostProfile, wants_adcc: bool) -> int:
+    """How many persist events ``steps_run`` executed steps triggered.
+
+    Traditional mechanisms persist every ``strategy_interval`` steps;
+    ADCC's cadence is algorithm-directed, carried by the profile's
+    ``interval_steps`` (e.g. XSBench's selective flush interval). The
+    single source for a cell's modeled mechanism overhead — both the
+    full-execution path and mode="measure" (which never runs the tail,
+    so its overhead must come from this model, not from execution)
+    charge ``events * mechanism_step_seconds(...)``.
+    """
+    interval = strategy_interval * (profile.interval_steps
+                                    if wants_adcc else 1)
+    return steps_run // max(1, interval)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -102,7 +102,17 @@ class CrashPlan:
     # -- grounding ------------------------------------------------------------
     def resolve(self, workload: "Workload") -> List[CrashPoint]:
         """Ground this plan against a set-up workload. Returns one
-        :class:`CrashPoint` per scenario cell (>1 only for ``random``)."""
+        :class:`CrashPoint` per scenario cell (>1 for ``random`` /
+        ``every``).
+
+        Contract (property-tested in tests/test_crashplan_properties.py):
+        every resolved step lies in ``[0, n_steps)``, the returned steps
+        are strictly increasing (sorted, no duplicates — ``random``
+        samples without replacement and sorts), and resolution is a pure
+        function of (plan, workload step/phase layout): resolving twice,
+        or against another workload with the same layout, yields the
+        same points. Plans that cannot be grounded raise ``ValueError``
+        (``sweep()`` records these cells as skipped)."""
         n = workload.n_steps
         if self.kind == "none":
             return [CrashPoint(None)]

@@ -23,6 +23,33 @@ writes the ``BENCH_scenarios.json`` artifact. Two execution engines:
                  whole prefix on a fresh workload. O(full run) per
                  cell; kept as the oracle the fork engine must match
                  cell-for-cell (tests/benchmarks enforce it).
+
+Orthogonal to the engine, two execution *modes*:
+
+  mode="full"    (default) every crashed cell recovers, re-executes the
+                 tail, and runs ``finalize()`` — the complete
+                 ScenarioResult including end-of-run correctness,
+                 metrics, and traffic.
+  mode="measure" the EasyCrash/WITCHER crash-image-inspection shape:
+                 crashed cells stop after strategy recovery and
+                 *compute* the recompute-cost and correctness-class
+                 fields from the recovered state + the cost model —
+                 no tail execution, no ``finalize()``. Each crashed
+                 cell costs O(restore + recover) instead of O(tail),
+                 which is what makes exhaustive dense sweeps
+                 (``CrashPlan.at_every_step()`` over every strategy)
+                 cheap. Measured cells omit the fields only a full run
+                 defines (:data:`FULL_RUN_FIELDS`); every field they DO
+                 emit is identical to the full-execution cell
+                 (``measure_divergence_fields`` is the checker; tests
+                 and the ``sweep_timing`` CI gate enforce it).
+                 ``no_crash`` cells always run full (their "tail" is
+                 empty, so finalize is the only cost).
+
+``workers=N`` shards the (workload, strategy) pairs of a sweep across
+N processes — pairs are fully independent (fork-engine snapshots are
+per-emulator), results merge back in deterministic pair-major order,
+and ``workers=1`` is byte-identical to the serial path.
 """
 
 from __future__ import annotations
@@ -41,8 +68,9 @@ from .strategies import ConsistencyStrategy, make_strategy
 from .workloads import Workload, make_workload
 
 __all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
-           "AVG_STEP_JITTER_FLOOR", "SWEEP_ENGINES", "WALL_CLOCK_FIELDS",
-           "deterministic_cell_dict"]
+           "AVG_STEP_JITTER_FLOOR", "SWEEP_ENGINES", "SWEEP_MODES",
+           "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS", "deterministic_cell_dict",
+           "measure_divergence_fields", "classify_recovery"]
 
 # Below this measured mean step wall-time, per-step timing is dominated
 # by timer resolution / interpreter jitter, so ``avg_step_seconds``
@@ -52,6 +80,7 @@ __all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
 AVG_STEP_JITTER_FLOOR = 1e-3
 
 SWEEP_ENGINES = ("fork", "rerun")
+SWEEP_MODES = ("full", "measure")
 
 # ScenarioResult fields derived from host wall-clock measurement.
 # Everything else is deterministic — modeled seconds, traffic counts,
@@ -63,19 +92,71 @@ SWEEP_ENGINES = ("fork", "rerun")
 # engine-invariance contract excludes all three.
 WALL_CLOCK_FIELDS = ("wall_seconds", "avg_step_seconds", "resume_seconds")
 
+# ScenarioResult fields only a FULL execution (tail replay + finalize)
+# defines: end-of-run correctness/metrics, end-of-run traffic counters,
+# and the emulator's total modeled seconds. mode="measure" cells stop
+# at strategy recovery, set these to None, and ``to_json_dict`` omits
+# them — so a measured cell dict is a strict subset of the full cell
+# dict, equal on every shared deterministic field.
+FULL_RUN_FIELDS = ("correct", "metrics", "traffic", "modeled_total_seconds")
+
 
 def deterministic_cell_dict(res: "ScenarioResult") -> Dict[str, Any]:
     """``to_json_dict`` minus :data:`WALL_CLOCK_FIELDS` — the payload on
     which fork- and rerun-engine sweeps must agree cell-for-cell."""
     d = res.to_json_dict()
     for f in WALL_CLOCK_FIELDS:
-        d.pop(f)
+        d.pop(f, None)
     return d
+
+
+def measure_divergence_fields(measured: "ScenarioResult",
+                              full: "ScenarioResult") -> List[str]:
+    """The measure-mode contract checker: every deterministic field a
+    measured cell emits must exist in — and equal — the full-execution
+    cell. Returns the offending field names ([] = contract holds)."""
+    dm = deterministic_cell_dict(measured)
+    df = deterministic_cell_dict(full)
+    return sorted(k for k in dm if k not in df or dm[k] != df[k])
+
+
+def classify_recovery(crashed: bool, crash_step: Optional[int],
+                      rec: Optional["RecoveryResult"]) -> str:
+    """Correctness class of a cell, computed from the recovered state's
+    bookkeeping (the strategy's :class:`RecoveryResult`) — no tail
+    execution required, so measure-mode cells carry it too:
+
+      complete             the run never crashed
+      unrecovered          crashed and recovery was not attempted
+      scratch_restart      recovery restarts from step 0
+      consistent_rollback  recovery resumed from a consistent earlier
+                           point; deterministic tail replay re-derives
+                           everything that was lost
+      lost_updates         completed work was lost that replay will NOT
+                           re-derive (steps_lost exceeds the steps the
+                           tail re-executes — the XSBench Fig.-10
+                           stale-counter shape)
+    """
+    if not crashed or crash_step is None:
+        return "complete"
+    if rec is None:
+        return "unrecovered"
+    if rec.from_scratch or rec.restart_point < 0:
+        return "scratch_restart"
+    lost, redo = _recovery_bookkeeping(rec, crash_step)
+    if lost > redo:
+        return "lost_updates"
+    return "consistent_rollback"
 
 
 @dataclasses.dataclass
 class ScenarioResult:
-    """Uniform per-cell outcome (JSON-serializable via ``to_json_dict``)."""
+    """Uniform per-cell outcome (JSON-serializable via ``to_json_dict``).
+
+    The fields in :data:`FULL_RUN_FIELDS` are ``None`` on mode="measure"
+    cells (they require tail execution + ``finalize()``) and omitted
+    from the JSON dict; everything else means the same thing in every
+    cell regardless of engine or mode."""
 
     workload: str
     workload_params: Dict[str, Any]
@@ -97,16 +178,22 @@ class ScenarioResult:
     # smoke sizes is pure jitter; the modeled cost is deterministic)
     avg_step_seconds: float
     overhead_seconds: float          # modeled mechanism cost (cost model)
-    modeled_total_seconds: float     # emulator's total modeled seconds
+    modeled_total_seconds: Optional[float]  # emulator's total modeled seconds
     wall_seconds: float
-    correct: bool
-    metrics: Dict[str, float]
-    traffic: Dict[str, int]
+    correct: Optional[bool]
+    # recovered-state classification (see classify_recovery) — defined
+    # in every mode, unlike the end-of-run ``correct`` bit
+    correctness_class: str
+    metrics: Optional[Dict[str, float]]
+    traffic: Optional[Dict[str, int]]
     info: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
 
     def to_json_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("info")
+        for f in FULL_RUN_FIELDS:
+            if d[f] is None:
+                d.pop(f)
         return _jsonable(d)
 
 
@@ -163,6 +250,29 @@ def _forward(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint
     return crashed, wall, modeled
 
 
+def _crash_avg_step(wl: Workload, crash_step: Optional[int], crashed: bool,
+                    wall_durs: Sequence[float],
+                    modeled_durs: Sequence[float]) -> float:
+    """Mean per-step seconds, normalized against the phase the crash
+    landed in (loop-2 block additions are much cheaper than loop-1
+    chunk multiplies)."""
+    if not crashed:
+        return _avg_step_seconds(wall_durs, modeled_durs)
+    phase_rng = next((rng for rng in wl.phases().values()
+                      if crash_step in rng), range(wl.n_steps))
+    idx = [j for j in phase_rng if j < len(wall_durs)]
+    return _avg_step_seconds([wall_durs[j] for j in idx],
+                             [modeled_durs[j] for j in idx])
+
+
+def _recovery_bookkeeping(rec, crash_step: int) -> Tuple[int, int]:
+    """(steps_lost, steps_recomputed) from a RecoveryResult."""
+    lost = rec.steps_lost if rec.steps_lost is not None else (
+        crash_step - rec.restart_point if rec.restart_point >= 0
+        else crash_step + 1)
+    return lost, rec.redo_steps
+
+
 def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
             plan_desc: str, recover: bool, crashed: bool,
             wall_durs: Sequence[float], modeled_durs: Sequence[float],
@@ -174,22 +284,15 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     emu = wl.emu
     n = wl.n_steps
     steps_run = (crash_step + 1) if crashed else n
-    # normalize recompute against the phase the crash landed in (loop-2
-    # block additions are much cheaper than loop-1 chunk multiplies)
-    if crashed:
-        phase_rng = next((rng for rng in wl.phases().values()
-                          if crash_step in rng), range(n))
-        idx = [j for j in phase_rng if j < len(wall_durs)]
-        avg_step = _avg_step_seconds([wall_durs[j] for j in idx],
-                                     [modeled_durs[j] for j in idx])
-    else:
-        avg_step = _avg_step_seconds(wall_durs, modeled_durs)
+    avg_step = _crash_avg_step(wl, crash_step, crashed, wall_durs,
+                               modeled_durs)
 
     restart: Optional[int] = None
     resume: Optional[int] = None
     lost = 0
     redo = 0
     detect_s = 0.0
+    rec = None
     rec_info: Dict[str, Any] = {}
     steps_done = n
 
@@ -198,9 +301,8 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         if recover:
             rec = strat.recover(crash_step, torn)
             restart, resume = rec.restart_point, rec.resume_step
-            detect_s, redo = rec.detect_seconds, rec.redo_steps
-            lost = rec.steps_lost if rec.steps_lost is not None else (
-                crash_step - restart if restart >= 0 else crash_step + 1)
+            detect_s = rec.detect_seconds
+            lost, redo = _recovery_bookkeeping(rec, crash_step)
             rec_info = dict(rec.info)
             for j in range(rec.resume_step, n):
                 strat.before_step(j)
@@ -210,11 +312,8 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
             steps_done = crash_step + 1
 
     report = wl.finalize()
-    profile = wl.step_cost_profile()
-    interval = strat.interval * (profile.interval_steps
-                                 if strat.wants_adcc else 1)
-    events = steps_run // max(1, interval)
-    overhead = events * strat.modeled_step_seconds(profile, emu.cfg)
+    overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
+                                              emu.cfg, steps_run)
     stats = emu.stats
 
     info = dict(report.info)
@@ -231,7 +330,9 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         overhead_seconds=overhead,
         modeled_total_seconds=emu.modeled_seconds(),
         wall_seconds=time.perf_counter() - t0,
-        correct=report.correct, metrics=dict(report.metrics),
+        correct=report.correct,
+        correctness_class=classify_recovery(crashed, crash_step, rec),
+        metrics=dict(report.metrics),
         traffic={
             "nvm_bytes_written": stats.nvm_bytes_written,
             "nvm_bytes_read": stats.nvm_bytes_read,
@@ -242,10 +343,57 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     )
 
 
+def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
+             plan_desc: str, wall_durs: Sequence[float],
+             modeled_durs: Sequence[float], t0: float) -> ScenarioResult:
+    """The mode="measure" cell evaluator: crash, run strategy recovery,
+    then *compute* every recompute/restart/cost field from the recovered
+    state + the cost model — no tail execution, no ``finalize()``. The
+    caller must hand us the workload positioned at the crash point (the
+    fork engine restores a snapshot; the rerun engine just ran forward).
+
+    Only called for crashed cells — no_crash cells carry end-of-run
+    correctness/metrics, which require ``finalize()``, so both engines
+    route them through :func:`_finish` (whose "tail" is empty there)."""
+    crash_step, torn = point.step, point.torn
+    emu = wl.emu
+    n = wl.n_steps
+    avg_step = _crash_avg_step(wl, crash_step, True, wall_durs,
+                               modeled_durs)
+
+    emu.crash()
+    rec = strat.recover(crash_step, torn)
+    lost, redo = _recovery_bookkeeping(rec, crash_step)
+    overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
+                                              emu.cfg, crash_step + 1)
+
+    return ScenarioResult(
+        workload=wl.name, workload_params=wl.params(),
+        strategy=strat.name, plan=plan_desc,
+        crash_step=crash_step, torn=torn,
+        steps_total=n, steps_done=n,
+        restart_point=rec.restart_point, resume_step=rec.resume_step,
+        steps_lost=lost, steps_recomputed=redo,
+        detect_seconds=rec.detect_seconds, resume_seconds=avg_step * redo,
+        avg_step_seconds=avg_step,
+        overhead_seconds=overhead,
+        modeled_total_seconds=None,
+        wall_seconds=time.perf_counter() - t0,
+        correct=None,
+        correctness_class=classify_recovery(True, crash_step, rec),
+        metrics=None,
+        traffic=None,
+        info=dict(rec.info),
+    )
+
+
 def _run_point(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
-               plan_desc: str, recover: bool) -> ScenarioResult:
+               plan_desc: str, recover: bool,
+               mode: str = "full") -> ScenarioResult:
     t0 = time.perf_counter()
     crashed, wall, modeled = _forward(wl, strat, point)
+    if mode == "measure" and crashed:
+        return _measure(wl, strat, point, plan_desc, wall, modeled, t0)
     return _finish(wl, strat, point, plan_desc, recover, crashed,
                    wall, modeled, t0)
 
@@ -285,6 +433,75 @@ DEFAULT_SWEEP_PLANS: Sequence[CrashPlan] = (
 )
 
 
+def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
+                cfg: Optional[NVMConfig], engine: str, mode: str,
+                progress=None
+                ) -> Tuple[List[ScenarioResult], List[Dict[str, str]]]:
+    """Run every cell of one (workload, strategy) pair. The unit of work
+    both the serial loop and the multiprocess executor share — results
+    come back in plan-major, point-minor order either way."""
+    from .sweep_engine import run_pair_forked  # late: avoids import cycle
+
+    # one probe per (workload, strategy) pair grounds every plan
+    probe = make_workload(wl_spec)
+    strat = make_strategy(strat_spec)
+    probe.setup(cfg, "adcc" if strat.wants_adcc else "plain")
+    skipped: List[Dict[str, str]] = []
+    grounded: List[Tuple[CrashPlan, List[CrashPoint]]] = []
+    for plan in plans:
+        try:
+            grounded.append((plan, plan.resolve(probe)))
+        except ValueError as exc:
+            skipped.append({"workload": probe.name,
+                            "strategy": strat.name,
+                            "plan": plan.describe(),
+                            "reason": str(exc)})
+    if not grounded:
+        return [], skipped
+    if engine == "fork":
+        return (run_pair_forked(probe, strat, grounded, progress=progress,
+                                mode=mode), skipped)
+    results: List[ScenarioResult] = []
+    reuse: Optional[Tuple[Workload, ConsistencyStrategy]] = (probe, strat)
+    for plan, points in grounded:
+        for point in points:
+            if reuse is not None:
+                wl, st = reuse
+                reuse = None
+            else:
+                wl = make_workload(wl_spec)
+                st = make_strategy(strat_spec)
+                wl.setup(cfg, "adcc" if st.wants_adcc else "plain")
+            st.attach(wl)
+            res = _run_point(wl, st, point, plan.describe(),
+                             recover=True, mode=mode)
+            results.append(res)
+            if progress is not None:
+                progress(res)
+    return results, skipped
+
+
+def _run_pair_job(job) -> Tuple[List[ScenarioResult], List[Dict[str, str]]]:
+    """Top-level (picklable) worker entry for ``sweep(workers=N)``."""
+    wl_spec, strat_spec, plans, cfg, engine, mode = job
+    return _sweep_pair(wl_spec, strat_spec, plans, cfg, engine, mode)
+
+
+def _check_parallelizable(workloads: Sequence, strategies: Sequence) -> None:
+    """workers>1 ships pair specs to worker processes, so specs must be
+    the picklable registry forms, not live instances."""
+    for wl_spec in workloads:
+        if isinstance(wl_spec, Workload):
+            raise ValueError(
+                "sweep(workers>1) requires registry workload specs "
+                "('name' or ('name', {params})), not Workload instances")
+    for strat_spec in strategies:
+        if isinstance(strat_spec, ConsistencyStrategy):
+            raise ValueError(
+                "sweep(workers>1) requires strategy spec strings "
+                "('name' or 'name@interval'), not instances")
+
+
 def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           strategies: Sequence = ("none", "adcc", "undo_log",
                                   "checkpoint_hdd", "checkpoint_nvm",
@@ -293,7 +510,9 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           cfg: Optional[NVMConfig] = None,
           out_json: Optional[str] = None,
           progress=None,
-          engine: str = "fork") -> List[ScenarioResult]:
+          engine: str = "fork",
+          mode: str = "full",
+          workers: int = 1) -> List[ScenarioResult]:
     """Run the full workloads × strategies × crash-plans matrix.
 
     All plans of a (workload, strategy) pair are grounded against one
@@ -304,6 +523,17 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     each cell from step 0 on a fresh workload instance. Both engines
     produce identical cells (modulo ``wall_seconds``); fork makes dense
     plans (``CrashPlan.at_every_step()``) tractable.
+
+    ``mode="measure"`` stops each crashed cell after strategy recovery
+    and computes the recompute/restart fields from the recovered state
+    (module docstring) — the cell omits :data:`FULL_RUN_FIELDS`.
+
+    ``workers=N`` shards the (workload, strategy) pairs across N
+    processes (pairs are independent; snapshots are per-emulator) and
+    merges results in deterministic pair-major order, so the cell list
+    is identical to ``workers=1`` regardless of completion order.
+    Requires picklable registry specs. ``progress`` then fires per pair
+    (in merge order) instead of per cell.
 
     ``out_json`` writes the ``BENCH_scenarios.json`` artifact:
     ``{"schema": ..., "cells": [<ScenarioResult>...], "skipped": [...]}``.
@@ -316,49 +546,43 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     if engine not in SWEEP_ENGINES:
         raise ValueError(f"unknown sweep engine {engine!r}; "
                          f"choose from {SWEEP_ENGINES}")
-    from .sweep_engine import run_pair_forked  # late: avoids import cycle
+    if mode not in SWEEP_MODES:
+        raise ValueError(f"unknown sweep mode {mode!r}; "
+                         f"choose from {SWEEP_MODES}")
+    if workers < 1:
+        raise ValueError("workers must be >= 1")
 
+    pairs = [(wl_spec, strat_spec)
+             for wl_spec in workloads for strat_spec in strategies]
     results: List[ScenarioResult] = []
     skipped: List[Dict[str, str]] = []
-    for wl_spec in workloads:
-        for strat_spec in strategies:
-            # one probe per (workload, strategy) pair grounds every plan
-            probe = make_workload(wl_spec)
-            strat = make_strategy(strat_spec)
-            probe.setup(cfg, "adcc" if strat.wants_adcc else "plain")
-            grounded: List[Tuple[CrashPlan, List[CrashPoint]]] = []
-            for plan in plans:
-                try:
-                    grounded.append((plan, plan.resolve(probe)))
-                except ValueError as exc:
-                    skipped.append({"workload": probe.name,
-                                    "strategy": strat.name,
-                                    "plan": plan.describe(),
-                                    "reason": str(exc)})
-            if not grounded:
-                continue
-            if engine == "fork":
-                results.extend(
-                    run_pair_forked(probe, strat, grounded,
-                                    progress=progress))
-                continue
-            reuse: Optional[Tuple[Workload, ConsistencyStrategy]] = \
-                (probe, strat)
-            for plan, points in grounded:
-                for point in points:
-                    if reuse is not None:
-                        wl, st = reuse
-                        reuse = None
-                    else:
-                        wl = make_workload(wl_spec)
-                        st = make_strategy(strat_spec)
-                        wl.setup(cfg, "adcc" if st.wants_adcc else "plain")
-                    st.attach(wl)
-                    res = _run_point(wl, st, point, plan.describe(),
-                                     recover=True)
-                    results.append(res)
-                    if progress is not None:
+
+    if workers > 1:
+        # uniform contract: the spec requirement holds whenever sharding
+        # was REQUESTED, even if a single-pair matrix ends up serial
+        _check_parallelizable(workloads, strategies)
+    if workers > 1 and len(pairs) > 1:
+        import multiprocessing as mp
+        start = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+        ctx = mp.get_context(start)
+        jobs = [(w, s, tuple(plans), cfg, engine, mode) for w, s in pairs]
+        with ctx.Pool(processes=min(workers, len(jobs))) as pool:
+            # imap preserves submission order: the merge is pair-major
+            # and deterministic no matter which worker finishes first
+            for pair_results, pair_skipped in pool.imap(_run_pair_job, jobs):
+                results.extend(pair_results)
+                skipped.extend(pair_skipped)
+                if progress is not None:
+                    for res in pair_results:
                         progress(res)
+    else:
+        for wl_spec, strat_spec in pairs:
+            pair_results, pair_skipped = _sweep_pair(
+                wl_spec, strat_spec, plans, cfg, engine, mode,
+                progress=progress)
+            results.extend(pair_results)
+            skipped.extend(pair_skipped)
+
     if out_json:
         write_scenarios_json(out_json, results, skipped=skipped)
     return results

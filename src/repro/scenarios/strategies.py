@@ -95,6 +95,15 @@ class ConsistencyStrategy:
                              cfg: NVMConfig) -> float:
         return costmodel.mechanism_step_seconds(cls.key, profile, cfg)
 
+    def modeled_overhead_seconds(self, profile: costmodel.StepCostProfile,
+                                 cfg: NVMConfig, steps_run: int) -> float:
+        """Total modeled mechanism cost of a run that executed
+        ``steps_run`` steps — the ``overhead_seconds`` cell field,
+        charged identically by full and measure-mode evaluation."""
+        events = costmodel.persist_events(steps_run, self.interval,
+                                          profile, self.wants_adcc)
+        return events * self.modeled_step_seconds(profile, cfg)
+
 
 class NativeStrategy(ConsistencyStrategy):
     key = "none"

@@ -33,7 +33,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .crashplan import CrashPlan, CrashPoint
-from .driver import ScenarioResult, _finish
+from .driver import ScenarioResult, _finish, _measure
 from .strategies import ConsistencyStrategy
 from .workloads import Workload
 
@@ -60,12 +60,19 @@ class _CellSnapshot:
 
 def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
                     grounded: Sequence[Tuple[CrashPlan, List[CrashPoint]]],
-                    progress=None) -> List[ScenarioResult]:
+                    progress=None, mode: str = "full") -> List[ScenarioResult]:
     """Evaluate every cell of one set-up (workload, strategy) pair.
 
     ``grounded`` is the pre-resolved [(plan, [CrashPoint...]), ...] for
     this pair. Returns ScenarioResults in plan-major, point-minor order
     — the same order the rerun engine emits.
+
+    ``mode="measure"`` evaluates each crashed cell as restore + crash +
+    recover only — the recompute/restart fields are computed from the
+    recovered state instead of executing the tail and ``finalize()``
+    (see :func:`repro.scenarios.driver._measure`), dropping the
+    per-cell cost from O(restore + tail) to O(restore + recover).
+    no_crash cells always take the full path (it is already tail-free).
     """
     strat.attach(wl)
     emu = wl.emu
@@ -127,11 +134,14 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
                 # step's entry is partial for torn crashes, matching
                 # what the rerun engine's broken-off loop records
                 s = point.step
-                res = _finish(
-                    wl, strat, point, plan.describe(),
-                    recover=True, crashed=True,
-                    wall_durs=wall[:s] + [snap.wall_last],
-                    modeled_durs=modeled[:s] + [snap.modeled_last], t0=t0)
+                durs = dict(wall_durs=wall[:s] + [snap.wall_last],
+                            modeled_durs=modeled[:s] + [snap.modeled_last])
+                if mode == "measure":
+                    res = _measure(wl, strat, point, plan.describe(),
+                                   t0=t0, **durs)
+                else:
+                    res = _finish(wl, strat, point, plan.describe(),
+                                  recover=True, crashed=True, t0=t0, **durs)
             results.append(res)
             if progress is not None:
                 progress(res)

@@ -1,0 +1,157 @@
+"""Property-based tests for the CrashPlan resolution contract.
+
+Uses ``hypothesis`` when installed; otherwise the deterministic
+stand-in from ``repro._compat`` (installed by tests/conftest.py) draws
+seeded random examples with the same API — either way the properties
+are replayable.
+
+The contract under test (see CrashPlan.resolve):
+
+  * every resolved crash step lies in ``[0, n_steps)``;
+  * resolved steps are strictly increasing — sorted, deduplicated —
+    for every plan kind, including seeded ``random`` batches and the
+    dense ``at_every_step`` plan;
+  * resolution is pure: the same plan against the same step/phase
+    layout yields the same points, every time;
+  * seeded random batches are engine- and mode-invariant end to end:
+    ``sweep`` produces the same deterministic cells under
+    engine="fork", engine="rerun", and mode="measure" (on the fields a
+    measured cell defines).
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nvm import NVMConfig
+from repro.scenarios import (CrashPlan, deterministic_cell_dict,
+                             measure_divergence_fields, sweep)
+
+SMALL = NVMConfig(cache_bytes=256 * 1024)
+
+
+class _StubWorkload:
+    """The minimal surface ``CrashPlan.resolve`` grounds against: a
+    step count, a phase layout, and a name. Keeps the plan-contract
+    properties decoupled from (and much faster than) real workloads."""
+
+    name = "stub"
+
+    def __init__(self, n_steps: int, phases=None):
+        self._n = int(n_steps)
+        self._phases = phases if phases is not None \
+            else {"main": range(self._n)}
+
+    @property
+    def n_steps(self) -> int:
+        return self._n
+
+    def phases(self):
+        return dict(self._phases)
+
+
+def _split_phases(n):
+    head = range(0, (n + 1) // 2)
+    return {"head": head, "tail": range(len(head), n)}
+
+
+def _build_plan(kind, n, raw_step, frac, count, seed, torn):
+    if kind == "none":
+        return CrashPlan.no_crash()
+    if kind == "step":
+        return CrashPlan.at_step(raw_step % n, torn)
+    if kind == "phase":
+        head = _split_phases(n)["head"]
+        return CrashPlan.at_phase("head", raw_step % len(head), torn)
+    if kind == "fraction":
+        return CrashPlan.at_fraction(frac, torn)
+    if kind == "random":
+        return CrashPlan.random(count=min(count, n), seed=seed, torn=torn)
+    return CrashPlan.at_every_step(torn)
+
+
+@given(kind=st.sampled_from(["none", "step", "phase", "fraction",
+                             "random", "every"]),
+       n=st.integers(1, 48), raw_step=st.integers(0, 1000),
+       frac=st.floats(0.0, 1.0), count=st.integers(1, 9),
+       seed=st.integers(0, 2**16), torn=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_resolved_points_sorted_dedup_in_range(kind, n, raw_step, frac,
+                                               count, seed, torn):
+    wl = _StubWorkload(n, _split_phases(n))
+    plan = _build_plan(kind, n, raw_step, frac, count, seed, torn)
+    points = plan.resolve(wl)
+    if kind == "none":
+        assert [p.step for p in points] == [None]
+        return
+    steps = [p.step for p in points]
+    assert all(0 <= s < n for s in steps)
+    assert steps == sorted(set(steps)), (kind, steps)
+    assert all(p.torn == torn for p in points)
+    # purity: resolving again — or against another workload with the
+    # same layout — yields identical points
+    again = plan.resolve(_StubWorkload(n, _split_phases(n)))
+    assert [(p.step, p.torn) for p in again] == \
+        [(p.step, p.torn) for p in points]
+
+
+@given(n=st.integers(1, 64), frac=st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_at_fraction_stays_in_step_range(n, frac):
+    (pt,) = CrashPlan.at_fraction(frac).resolve(_StubWorkload(n))
+    assert 0 <= pt.step < n
+    # endpoints pin to the first/last step
+    assert CrashPlan.at_fraction(0.0).resolve(_StubWorkload(n))[0].step == 0
+    assert CrashPlan.at_fraction(1.0).resolve(
+        _StubWorkload(n))[0].step == n - 1
+
+
+@given(count=st.integers(1, 10), seed=st.integers(0, 2**16),
+       n=st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_random_batches_are_reproducible(count, seed, n):
+    wl = _StubWorkload(n)
+    plan = CrashPlan.random(count=min(count, n), seed=seed)
+    a = [p.step for p in plan.resolve(wl)]
+    b = [p.step for p in plan.resolve(wl)]
+    assert a == b
+    assert len(a) == len(set(a)) == min(count, n)
+
+
+@given(count=st.integers(1, 3), seed=st.integers(0, 64),
+       torn=st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_random_batches_engine_and_mode_invariant(count, seed, torn):
+    """fork == rerun == measure (where fields overlap) for seeded
+    random crash batches on a real workload."""
+    plan = CrashPlan.random(count=count, seed=seed, torn=torn)
+    kw = dict(workloads=(("cg", {"n": 128, "iters": 6, "seed": 0}),),
+              strategies=("checkpoint_nvm@2",), plans=(plan,), cfg=SMALL)
+    fork = sweep(engine="fork", **kw)
+    rerun = sweep(engine="rerun", **kw)
+    measure = sweep(engine="fork", mode="measure", **kw)
+    assert [deterministic_cell_dict(c) for c in fork] == \
+        [deterministic_cell_dict(c) for c in rerun]
+    assert len(measure) == len(fork) == count
+    for m, f in zip(measure, fork):
+        assert measure_divergence_fields(m, f) == []
+    steps = [c.crash_step for c in fork]
+    assert steps == sorted(set(steps))
+
+
+def test_invalid_plan_parameters_raise():
+    with pytest.raises(ValueError):
+        CrashPlan.at_step(-1)
+    with pytest.raises(ValueError):
+        CrashPlan.at_fraction(1.5)
+    with pytest.raises(ValueError):
+        CrashPlan.random(count=0)
+
+
+def test_ungroundable_plans_raise_not_clamp():
+    wl = _StubWorkload(4)
+    with pytest.raises(ValueError):
+        CrashPlan.at_step(4).resolve(wl)
+    with pytest.raises(ValueError):
+        CrashPlan.random(count=5, seed=0).resolve(wl)
+    with pytest.raises(ValueError):
+        CrashPlan.at_phase("loop2", 0).resolve(wl)

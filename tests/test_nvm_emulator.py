@@ -200,6 +200,48 @@ class TestUndoLog:
         assert mgr.recover()
         assert np.all(emu.post_crash_view("x") == 1.0)
 
+    def test_second_crash_after_rollback_reloads_rolled_back_image(self):
+        # crash() fast-paths regions with a clean cache (truth == image
+        # there) — EXCEPT after an undo-log rollback, which rewrites the
+        # image with pre-tx values truth never saw. A second crash
+        # before resync_truth must still see the rolled-back image.
+        from repro.core.transactions import TxManager
+        emu = small_emu(cache_bytes=1 << 16)
+        r = emu.alloc("x", (8,))
+        r[...] = 1.0
+        r.flush()
+        mgr = TxManager(emu)
+        tx = mgr.begin()
+        tx.write(r, Ellipsis, np.full(8, 2.0))
+        r.flush()
+        emu.crash()
+        assert mgr.recover()          # image rolled back to 1.0; truth
+        emu.crash()                   # not yet resynced; crash again
+        assert np.all(r.view == 1.0)
+        assert np.all(emu.post_crash_view("x") == 1.0)
+
+    def test_snapshot_between_rollback_and_resync_carries_divergence(self):
+        # EmuSnapshot must carry the pending rollback-induced
+        # truth/image divergence: restoring a snapshot taken before
+        # resync_truth and crashing again must still reload the
+        # rolled-back image
+        from repro.core.transactions import TxManager
+        emu = small_emu(cache_bytes=1 << 16)
+        r = emu.alloc("x", (8,))
+        r[...] = 1.0
+        r.flush()
+        mgr = TxManager(emu)
+        tx = mgr.begin()
+        tx.write(r, Ellipsis, np.full(8, 2.0))
+        r.flush()
+        emu.crash()
+        assert mgr.recover()
+        snap = emu.snapshot()         # divergence pending at capture
+        emu.resync_truth("x")         # move the live state past it
+        emu.restore(snap)
+        emu.crash()
+        assert np.all(r.view == 1.0)
+
     def test_undo_log_charges_persist_cost(self):
         from repro.core.transactions import TxManager
         emu = small_emu(cache_bytes=1 << 16)

@@ -20,6 +20,7 @@ from repro.algorithms.xsbench import ADCC_XSBench, XSBenchConfig
 from repro.core import abft
 from repro.core.nvm import NVMConfig
 from repro.scenarios import (
+    FULL_RUN_FIELDS,
     STRATEGIES,
     WALL_CLOCK_FIELDS,
     CrashPlan,
@@ -27,6 +28,7 @@ from repro.scenarios import (
     deterministic_cell_dict,
     make_strategy,
     make_workload,
+    measure_divergence_fields,
     mechanism_cases,
     mechanism_step_seconds,
     run_scenario,
@@ -361,6 +363,157 @@ class TestForkEngine:
         replay = wl.finalize()
         assert np.array_equal(replay.info["z"], direct.info["z"])
         assert wl.emu.stats.nvm_bytes_written == traffic
+
+
+class TestMeasureMode:
+    """mode="measure" stops each crashed cell after strategy recovery
+    and computes its fields from the recovered state. Contract: the
+    measured cell dict is a STRICT field-subset of the full-execution
+    fork cell dict, equal on every shared deterministic field, and the
+    omitted fields are exactly FULL_RUN_FIELDS."""
+
+    WLS = TestForkEngine.WLS
+    PLANS = (CrashPlan.no_crash(), CrashPlan.at_fraction(0.4),
+             CrashPlan.at_fraction(0.8, torn=True))
+
+    def test_measure_is_field_subset_of_fork_on_every_pair(self):
+        # every strategy x workload smoke cell
+        kw = dict(workloads=self.WLS, strategies=ALL_STRATEGIES,
+                  plans=self.PLANS, cfg=SMALL)
+        full = sweep(engine="fork", mode="full", **kw)
+        meas = sweep(engine="fork", mode="measure", **kw)
+        assert len(full) == len(meas) > 0
+        for f, m in zip(full, meas):
+            cell = (m.workload, m.strategy, m.plan, m.crash_step)
+            assert measure_divergence_fields(m, f) == [], cell
+            if m.crash_step is None:
+                # no_crash cells always execute fully (tail-free anyway)
+                assert deterministic_cell_dict(m) == \
+                    deterministic_cell_dict(f), cell
+            else:
+                dm, df = m.to_json_dict(), f.to_json_dict()
+                assert set(dm) < set(df), cell
+                assert set(df) - set(dm) == set(FULL_RUN_FIELDS), cell
+
+    def test_measure_is_engine_invariant(self):
+        kw = dict(workloads=(CG,), strategies=("adcc", "undo_log@2"),
+                  plans=(CrashPlan.at_every_step(),), cfg=SMALL,
+                  mode="measure")
+        fork = sweep(engine="fork", **kw)
+        rerun = sweep(engine="rerun", **kw)
+        assert [deterministic_cell_dict(c) for c in fork] == \
+            [deterministic_cell_dict(c) for c in rerun]
+
+    def test_measure_cells_skip_finalize_fields(self):
+        (cell,) = sweep(workloads=(CG,), strategies=("checkpoint_nvm",),
+                        plans=(CrashPlan.at_step(5),), cfg=SMALL,
+                        mode="measure")
+        assert cell.correct is None and cell.metrics is None
+        assert cell.traffic is None and cell.modeled_total_seconds is None
+        assert cell.steps_lost == 0 and cell.restart_point == 5
+        assert cell.resume_seconds == 0.0
+
+    def test_unknown_mode_raises(self):
+        with pytest.raises(ValueError):
+            sweep(workloads=(CG,), strategies=("none",), mode="partial")
+
+
+class TestCorrectnessClass:
+    """correctness_class is computed from the recovered state's
+    bookkeeping — identical across engines and modes, and meaningful
+    without finalize()."""
+
+    def test_no_crash_is_complete(self):
+        res = run_scenario(CG, "adcc", CrashPlan.no_crash(), cfg=SMALL)
+        assert res.correctness_class == "complete"
+
+    def test_checkpoint_rolls_back_consistently(self):
+        res = run_scenario(CG, "checkpoint_nvm@3", CrashPlan.at_step(7),
+                           cfg=SMALL)
+        assert res.correctness_class == "consistent_rollback"
+
+    def test_native_restarts_from_scratch(self):
+        res = run_scenario(CG, "none", CrashPlan.at_step(5), cfg=SMALL)
+        assert res.correctness_class == "scratch_restart"
+
+    def test_unrecovered_crash(self):
+        res = run_scenario(CG, "none", CrashPlan.at_step(5), cfg=SMALL,
+                           recover=False)
+        assert res.correctness_class == "unrecovered"
+
+    def test_xsbench_basic_policy_loses_updates(self):
+        # the paper's Fig.-10 failing scheme: the loop index is flushed
+        # every lookup but the counters go stale in cache — recovery
+        # resumes past updates that never persisted, and the class
+        # (computed WITHOUT running the tail) flags exactly the cells
+        # whose end-of-run counts come out wrong
+        cfg = NVMConfig(cache_bytes=4096)
+        res = run_scenario(
+            ("xsbench", {"lookups": 400, "grid_points": 400,
+                         "n_nuclides": 8, "n_materials": 6,
+                         "max_nuclides_per_material": 4,
+                         "flush_every_frac": 0.02, "seed": 7,
+                         "policy": "basic"}),
+            "adcc", CrashPlan.at_fraction(0.6), cfg=cfg)
+        assert res.correctness_class == "lost_updates"
+        assert res.correct is False
+
+
+class TestSweepInvariance:
+    """sweep() results depend only on the cell coordinates, not on
+    listing order or execution sharding (the workers>1 CI gate)."""
+
+    WLS = (("cg", {"n": 256, "iters": 6, "seed": 3}),
+           ("mm", {"n": 32, "k": 8, "seed": 1}))
+    STRATS = ("adcc", "checkpoint_nvm@2")
+    PLANS = (CrashPlan.no_crash(), CrashPlan.at_fraction(0.5),
+             CrashPlan.random(count=2, seed=1))
+
+    @staticmethod
+    def _keyed(cells):
+        keyed = {(c.workload, c.strategy, c.plan, c.crash_step, c.torn):
+                 deterministic_cell_dict(c) for c in cells}
+        assert len(keyed) == len(cells)
+        return keyed
+
+    def test_results_invariant_to_listing_order(self):
+        fwd = sweep(workloads=self.WLS, strategies=self.STRATS,
+                    plans=self.PLANS, cfg=SMALL)
+        rev = sweep(workloads=tuple(reversed(self.WLS)),
+                    strategies=tuple(reversed(self.STRATS)),
+                    plans=tuple(reversed(self.PLANS)), cfg=SMALL)
+        assert self._keyed(fwd) == self._keyed(rev)
+
+    @pytest.mark.parametrize("mode", ["full", "measure"])
+    def test_workers_match_serial_cell_for_cell(self, mode):
+        kw = dict(workloads=self.WLS, strategies=self.STRATS,
+                  plans=self.PLANS, cfg=SMALL, mode=mode)
+        serial = sweep(workers=1, **kw)
+        sharded = sweep(workers=2, **kw)
+        assert [deterministic_cell_dict(c) for c in sharded] == \
+            [deterministic_cell_dict(c) for c in serial]
+
+    def test_workers_skip_same_cells_deterministically(self, tmp_path):
+        out1, out2 = tmp_path / "w1.json", tmp_path / "w2.json"
+        kw = dict(workloads=(CG, MM), strategies=("none", "adcc"),
+                  plans=(CrashPlan.at_phase("loop2", 0),), cfg=SMALL)
+        sweep(workers=1, out_json=str(out1), **kw)
+        sweep(workers=2, out_json=str(out2), **kw)
+        p1, p2 = json.loads(out1.read_text()), json.loads(out2.read_text())
+        assert p1["skipped"] == p2["skipped"] and len(p1["skipped"]) == 3
+
+    def test_workers_require_picklable_specs(self):
+        wl = make_workload(CG)
+        with pytest.raises(ValueError):
+            sweep(workloads=(wl,), strategies=("none", "adcc"),
+                  plans=(CrashPlan.no_crash(),), cfg=SMALL, workers=2)
+        with pytest.raises(ValueError):
+            sweep(workloads=(CG, MM), strategies=(make_strategy("none"),),
+                  plans=(CrashPlan.no_crash(),), cfg=SMALL, workers=2)
+
+    def test_bad_workers_raises(self):
+        with pytest.raises(ValueError):
+            sweep(workloads=(CG,), strategies=("none",), workers=0)
 
 
 class TestCostModel:
