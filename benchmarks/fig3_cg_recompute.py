@@ -43,6 +43,14 @@ SMOKE_ITERS = 10
 
 PLANS = (CrashPlan.no_crash(), CrashPlan.at_every_step())
 
+# ADCC CG's invariant-scan restart is APPROXIMATELY consistent (the
+# paper's iterative-method tolerance argument): at the full sizes,
+# exactly this many (size, crash-step) cells finalize ~1e-5 off the
+# strict 1e-7 criterion. A pre-existing property of the seed algorithm
+# + seeds, pinned EXACTLY so it can't silently grow (or shrink) under
+# later changes — re-pin only after inspecting the offending cells.
+EXPECTED_INCORRECT_FULL_CELLS = 7
+
 
 def _workloads(sizes: Sequence[int], iters: int) -> Tuple:
     return tuple(("cg", {"n": n, "iters": iters, "seed": n}) for n in sizes)
@@ -66,10 +74,13 @@ def run(smoke: bool = None, workers: int = None) -> List[Row]:
     cells = sweep(mode="measure", workers=workers, **kw)
     # parallel==serial and measure==fork gate at EVERY size; the strict
     # per-cell correctness assert only at smoke sizes — at full sizes
-    # ADCC CG's approximate invariant-scan restart leaves a few cells
-    # ~1e-5 off the 1e-7 criterion (seed-algorithm property, reported
-    # below as incorrect_full_cells)
-    incorrect = check_dense_gates(kw, cells, workers, strict_correct=smoke)
+    # ADCC CG's approximate invariant-scan restart leaves EXACTLY
+    # EXPECTED_INCORRECT_FULL_CELLS cells ~1e-5 off the 1e-7 criterion
+    # (seed-algorithm property, reported below as incorrect_full_cells
+    # and pinned as an exact gate so it can't silently drift)
+    incorrect = check_dense_gates(
+        kw, cells, workers, strict_correct=smoke,
+        expected_incorrect=None if smoke else EXPECTED_INCORRECT_FULL_CELLS)
 
     rows = [Row("fig3/cg_recompute/incorrect_full_cells", len(incorrect),
                 "full-execution cells off the strict 1e-7 criterion")]

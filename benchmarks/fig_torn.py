@@ -1,0 +1,215 @@
+"""Beyond-paper figure: torn-write detection coverage vs line survival.
+
+The paper's central claim is that algorithm knowledge can detect or
+tolerate inconsistent NVM state after a crash — but a crash that loses
+*every* dirty cache line never produces the interesting inconsistent
+states. This suite sweeps the crash-state space those claims are about:
+``CrashPlan.at_every_step(torn=TornSpec(fraction, seed, mode, samples))``
+enumerates every crash step × survival fraction × seeded survival
+sample through ``sweep(mode="measure")``, so each cell is one sampled
+torn crash image (EasyCrash's sampling, WITCHER's enumeration) costing
+O(restore + recover).
+
+Reported per (workload, strategy, fraction, survival mode): the
+``correctness_class`` census — where CG's invariant scan, ABFT's
+checksums, and XSBench's counter/index comparison *detect* torn state
+(``torn_detected``), where a mechanism tolerates it wholesale
+(``consistent_rollback`` / ``scratch_restart``), and where torn state
+slips into the recovered run (``torn_corrupt`` — e.g. surviving XSBench
+counter increments past the persisted index that replay double-counts)
+— plus the measure-mode byte-certification census (``state_certified``).
+
+Gates (every run, smoke or full — ``check_torn_gates``):
+
+  * the ``--workers`` sharded measure sweep merges to the identical
+    cell list as the serial one;
+  * every field a measure cell emits equals the full-execution fork
+    cell (``measure_divergences``);
+  * class/correctness coherence on the full-execution sweep: a torn
+    cell classified anything but ``torn_corrupt`` must finalize
+    correct, and a ``torn_corrupt`` cell must finalize incorrect —
+    the classes really do partition safe from corrupted recoveries;
+  * certification coherence: a byte-certified cell is never
+    ``torn_corrupt``;
+  * detection-coverage floor: undo-log and checkpoint mechanisms
+    produce zero ``torn_corrupt`` cells at every fraction (rollback /
+    restore discards torn state by construction).
+"""
+
+from __future__ import annotations
+
+import os
+from collections import Counter
+from typing import Dict, List, Tuple
+
+from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, TornSpec, sweep
+from repro.scenarios.costmodel import survivor_writeback_seconds
+
+from .common import ART, Row, write_json
+
+ARTIFACT = "fig_torn.json"
+BENCH_JSON = os.path.join(ART, "BENCH_torn.json")
+
+SEED = 23
+FRACTIONS = (0.0, 0.25, 0.5, 0.75, 1.0)
+SMOKE_FRACTIONS = (0.0, 0.5, 1.0)
+SAMPLES = 3
+SMOKE_SAMPLES = 2
+
+WORKLOADS = (
+    ("cg", {"n": 2048, "iters": 12, "seed": 5}),
+    ("mm", {"n": 64, "k": 16, "seed": 2}),
+    ("xsbench", {"lookups": 160, "grid_points": 1200, "n_nuclides": 8,
+                 "n_materials": 6, "max_nuclides_per_material": 4,
+                 "flush_every_frac": 0.05, "seed": 7}),
+)
+SMOKE_WORKLOADS = (
+    ("cg", {"n": 512, "iters": 8, "seed": 5}),
+    ("mm", {"n": 32, "k": 8, "seed": 2}),
+    ("xsbench", {"lookups": 80, "grid_points": 600, "n_nuclides": 8,
+                 "n_materials": 6, "max_nuclides_per_material": 4,
+                 "flush_every_frac": 0.1, "seed": 7}),
+)
+STRATEGIES = ("adcc", "undo_log", "checkpoint_nvm@2")
+
+# mechanisms that discard torn state by construction: their rollback /
+# restore path must never let a torn crash image corrupt the resumed
+# run, at any survival fraction (the coverage-floor gate)
+WHOLESALE_STRATEGIES = ("undo_log", "checkpoint_nvm@2")
+
+# classes in which no torn data reaches the resumed computation
+SAFE_CLASSES = ("complete", "consistent_rollback", "scratch_restart",
+                "torn_detected")
+
+
+def _plans(fractions, samples) -> Tuple[CrashPlan, ...]:
+    dense = tuple(
+        CrashPlan.at_every_step(
+            torn=TornSpec(fraction=f, seed=SEED, mode="random",
+                          samples=samples))
+        for f in fractions)
+    # one eviction-order-consistent axis: queue-front lines persist
+    # first, the ordering a real write-back cache would produce
+    evict = (CrashPlan.at_every_step(
+        torn=TornSpec(fraction=0.5, seed=SEED, mode="eviction")),)
+    return (CrashPlan.no_crash(),) + dense + evict
+
+
+def _sweep_kw(smoke: bool) -> Dict:
+    wls, fr, s = ((SMOKE_WORKLOADS, SMOKE_FRACTIONS, SMOKE_SAMPLES)
+                  if smoke else (WORKLOADS, FRACTIONS, SAMPLES))
+    return dict(workloads=wls, strategies=STRATEGIES,
+                plans=_plans(fr, s), cfg=NVMConfig(cache_bytes=1024 * 1024))
+
+
+def _spec_of(cell) -> Tuple[str, float]:
+    """(survival mode, fraction) of a torn cell, from its spec string."""
+    mode, frac, _seed = cell.torn_survival.split(":", 2)
+    return mode, float(frac[1:])
+
+
+def check_torn_gates(kw: Dict, cells, workers: int) -> None:
+    """The gate stack documented in the module docstring. ``cells`` is
+    the serial-or-sharded measure-mode sweep of ``kw``. The sharding
+    and measure==full cross-checks are the shared dense-gate core
+    (``run_dense_cross_checks``); on top come the torn-specific
+    class/correctness coherence gates."""
+    from .scenarios_sweep import run_dense_cross_checks
+
+    full = run_dense_cross_checks(kw, cells, workers)
+
+    # explicit raises (not asserts): these are CI gates and must
+    # survive python -O, like the shared dense-gate core
+    for c in full:
+        key = (c.workload, c.strategy, c.plan, c.crash_step,
+               c.torn_survival)
+        if c.correctness_class == "torn_corrupt":
+            if c.correct:
+                raise AssertionError(
+                    f"cell classified torn_corrupt finalized CORRECT: {key}")
+        elif not c.correct:
+            raise AssertionError(
+                f"cell classified {c.correctness_class} finalized "
+                f"INCORRECT: {key}")
+        if (c.strategy in WHOLESALE_STRATEGIES and c.crash_step is not None
+                and c.correctness_class not in SAFE_CLASSES):
+            raise AssertionError(
+                f"wholesale mechanism let torn state through: {key} "
+                f"class={c.correctness_class}")
+
+    for m in cells:
+        if m.state_certified and m.correctness_class == "torn_corrupt":
+            raise AssertionError(
+                "byte-certified cell classified torn_corrupt: "
+                f"{(m.workload, m.strategy, m.crash_step, m.torn_survival)}")
+
+
+def run(smoke: bool = None, workers: int = None) -> List[Row]:
+    from .scenarios_sweep import resolve_sweep_env
+
+    smoke, workers = resolve_sweep_env(smoke, workers)
+    kw = _sweep_kw(smoke)
+    cells = sweep(mode="measure", workers=workers, **kw)
+    check_torn_gates(kw, cells, workers)
+
+    # detection-coverage census per (workload, strategy, mode, fraction)
+    coverage: Dict[Tuple, Counter] = {}
+    certified: Dict[Tuple, Counter] = {}
+    survivor_bytes: Dict[Tuple, int] = {}
+    for c in cells:
+        if c.torn_survival is None:
+            continue
+        key = (c.workload, c.strategy) + _spec_of(c)
+        coverage.setdefault(key, Counter())[c.correctness_class] += 1
+        certified.setdefault(key, Counter())[
+            {True: "yes", False: "no", None: "n/a"}[c.state_certified]] += 1
+        survivor_bytes[key] = (survivor_bytes.get(key, 0)
+                               + c.info.get("torn_bytes_persisted", 0))
+
+    rows = []
+    for key in sorted(coverage):
+        wl, strat, mode, frac = key
+        census = coverage[key]
+        total = sum(census.values())
+        safe = sum(census[k] for k in SAFE_CLASSES)
+        mean_bytes = survivor_bytes[key] / total
+        wb_s = survivor_writeback_seconds(mean_bytes, kw["cfg"])
+        prefix = f"fig_torn/{wl}/{strat}/{mode}/f={frac:g}"
+        rows.append(Row(f"{prefix}/cells", total,
+                        " ".join(f"{k}={v}" for k, v in sorted(census.items()))))
+        rows.append(Row(f"{prefix}/safe_fraction", safe / total,
+                        f"torn_corrupt={census.get('torn_corrupt', 0)}"))
+        rows.append(Row(f"{prefix}/certified_cells",
+                        certified[key].get("yes", 0),
+                        " ".join(f"{k}={v}"
+                                 for k, v in sorted(certified[key].items()))))
+        rows.append(Row(f"{prefix}/mean_survivor_bytes", mean_bytes,
+                        f"power-fail writeback ~{wb_s:.2e}s at NVM bw"))
+    write_json(BENCH_JSON, {
+        "schema": "repro.scenarios.torn/v1",
+        "smoke": bool(smoke),
+        "matrix": {
+            "workloads": [[w, p] for w, p in kw["workloads"]],
+            "strategies": list(STRATEGIES),
+            "plans": [p.describe() for p in kw["plans"]],
+        },
+        "cells": [c.to_json_dict() for c in cells],
+        "coverage": [
+            {"workload": k[0], "strategy": k[1], "mode": k[2],
+             "fraction": k[3], "classes": dict(coverage[k]),
+             "certified": dict(certified[k])}
+            for k in sorted(coverage)],
+    })
+    rows.append(Row("fig_torn/summary/cells", len(cells),
+                    f"artifact={BENCH_JSON}"))
+    return rows
+
+
+def main(argv=None) -> None:
+    from .common import dense_figure_cli
+    dense_figure_cli(run, ARTIFACT, argv)
+
+
+if __name__ == "__main__":
+    main()

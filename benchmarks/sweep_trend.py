@@ -1,0 +1,98 @@
+"""BENCH_sweep.json trend tracker — the dense-sweep artifact diff.
+
+The ``sweep`` suite's three hard divergence gates catch *correctness*
+regressions; this tool catches *performance* regressions the gates
+cannot see: a change that keeps fork==rerun cell-for-cell but quietly
+makes the fork engine re-copy every snapshot would sail through CI
+while the speedups collapse. Compare the current artifact's speedup
+columns against the previous one and fail when any drops by more than
+``--max-regression`` (default 2x — generous enough for shared-runner
+noise, tight enough that an O(tail) -> O(full-run) slip cannot hide).
+
+    python -m benchmarks.sweep_trend PREV.json NEW.json
+
+Exit codes: 0 = ok (including "no previous artifact yet" — the first
+run of a fresh cache seeds the baseline), 1 = regression. CI wires
+this behind an actions/cache-restored copy of the last successful
+run's BENCH_sweep.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+# the speedup columns BENCH_sweep.json has carried since schema v2
+TREND_METRICS = ("speedup", "measure_speedup", "total_speedup")
+
+
+def compare_speedups(prev: Dict, new: Dict,
+                     max_regression: float = 2.0) -> List[str]:
+    """Regression messages ([] = trend ok). Only ratios are compared —
+    absolute seconds shift with host load, but fork-over-rerun and
+    measure-over-fork are self-normalizing on the same host."""
+    failures = []
+    for metric in TREND_METRICS:
+        if metric not in prev:
+            continue  # older-schema baseline: nothing to compare yet
+        if metric not in new:
+            # a metric the baseline carried has vanished from the new
+            # artifact — a schema drift that would otherwise silently
+            # disable this gate forever
+            failures.append(
+                f"{metric}: present in previous artifact but missing "
+                f"from the new one (schema drift disables the gate)")
+            continue
+        old_v, new_v = float(prev[metric]), float(new[metric])
+        if old_v <= 0:
+            continue
+        if new_v < old_v / max_regression:
+            failures.append(
+                f"{metric}: {new_v:.2f}x vs previous {old_v:.2f}x "
+                f"(> {max_regression:g}x regression)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous BENCH_sweep.json (baseline)")
+    ap.add_argument("new", help="current BENCH_sweep.json")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when a speedup drops by more than this "
+                         "factor (default: 2.0)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.new):
+        print(f"sweep_trend: current artifact {args.new} missing", flush=True)
+        return 1
+    with open(args.new) as fh:
+        new = json.load(fh)
+    if not os.path.exists(args.prev):
+        print(f"sweep_trend: no previous artifact at {args.prev}; "
+              f"seeding baseline from this run", flush=True)
+        return 0
+    with open(args.prev) as fh:
+        prev = json.load(fh)
+    if prev.get("smoke") != new.get("smoke"):
+        print("sweep_trend: smoke/full mismatch between artifacts; "
+              "skipping (not comparable)", flush=True)
+        return 0
+
+    failures = compare_speedups(prev, new, args.max_regression)
+    for metric in TREND_METRICS:
+        if metric in new:
+            prev_s = f"{float(prev[metric]):.2f}x" if metric in prev else "-"
+            print(f"sweep_trend: {metric} {float(new[metric]):.2f}x "
+                  f"(previous {prev_s})", flush=True)
+    if failures:
+        print("sweep_trend: FAIL\n  " + "\n  ".join(failures), flush=True)
+        return 1
+    print("sweep_trend: ok", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

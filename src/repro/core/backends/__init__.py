@@ -15,11 +15,12 @@ environment variable. See README.md in this directory.
 
 from __future__ import annotations
 
-from .base import MemoryBackend
+from .base import LineSurvival, MemoryBackend, select_survivors
 from .reference import ReferenceLRUBackend
 from .vectorized import VectorizedBackend
 
-__all__ = ["MemoryBackend", "ReferenceLRUBackend", "VectorizedBackend",
+__all__ = ["MemoryBackend", "LineSurvival", "select_survivors",
+           "ReferenceLRUBackend", "VectorizedBackend",
            "BACKENDS", "make_backend"]
 
 BACKENDS = {

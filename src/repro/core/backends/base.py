@@ -28,19 +28,97 @@ and backends/README.md):
   absent entries one entry's bytes of write-pipeline occupancy;
 * ``drain`` is a full eviction sweep: writebacks are charged and
   ``lines_evicted`` counts every drained entry;
-* ``crash`` is free: volatile contents simply vanish;
+* ``crash`` is free in modeled seconds: volatile contents simply
+  vanish. A :class:`LineSurvival` spec makes the crash *torn* instead
+  of all-or-nothing — a deterministic subset of the dirty entries is
+  written back to the NVM image first (the writebacks that were
+  already in flight when power failed), recorded via
+  ``TrafficStats.note_torn_persist`` but never charged to
+  ``modeled_seconds``;
 * all charges for one program-visible operation are aggregated and
   applied through :meth:`TrafficStats.charge_batch` exactly once, so
   two backends replaying the same trace produce *identical* stats.
+
+Line-survival selection is shared code (:func:`select_survivors`), so
+the surviving subset — and therefore the post-crash NVM image — is
+byte-identical between the reference and vectorized backends for the
+same spec and dirty state (tests/test_torn_crashes.py enforces it on
+randomized traces).
 """
 
 from __future__ import annotations
 
-from typing import Protocol, runtime_checkable
+import dataclasses
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import numpy as np
 
-__all__ = ["MemoryBackend", "OpAccumulator"]
+__all__ = ["MemoryBackend", "OpAccumulator", "LineSurvival",
+           "select_survivors"]
+
+SURVIVAL_MODES = ("random", "eviction")
+
+
+@dataclasses.dataclass(frozen=True)
+class LineSurvival:
+    """Which dirty cache entries persist at a torn crash.
+
+    ``fraction`` of the dirty entries (rounded to the nearest count)
+    reach NVM before the lights go out; the rest vanish with the cache.
+
+      mode="random"    a seeded uniform subset over the canonical
+                       (region name, entry index) ordering — the
+                       EasyCrash-style sampled crash state;
+      mode="eviction"  the replacement-queue front persists first: the
+                       entries the cache would have written back next
+                       are exactly the ones that made it (WITCHER's
+                       ordering-consistent crash states).
+
+    Resolution is a pure function of (spec, dirty state): both backends
+    derive the same survivor set from the same spec.
+    """
+
+    fraction: float
+    seed: int = 0
+    mode: str = "random"
+
+    def __post_init__(self):
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError("survival fraction must be in [0, 1]")
+        if self.mode not in SURVIVAL_MODES:
+            raise ValueError(f"unknown survival mode {self.mode!r} "
+                             f"(choose from {SURVIVAL_MODES})")
+
+    def describe(self) -> str:
+        return f"{self.mode}:f{self.fraction:g}:s{self.seed}"
+
+
+def select_survivors(eviction_order: Sequence[Tuple[str, int]],
+                     survival: Optional[LineSurvival]
+                     ) -> List[Tuple[str, int]]:
+    """The one place the surviving dirty subset is chosen.
+
+    ``eviction_order`` is every dirty entry as ``(region, entry)`` in
+    replacement-queue order (front first — the next-to-be-evicted
+    entry leads). ``survival=None`` (the classic all-or-nothing crash)
+    selects nothing. The survivor count is ``round(fraction * n_dirty)``
+    (banker's rounding, as python's ``round``); "eviction" mode takes
+    the queue-front prefix, "random" draws a seeded uniform subset over
+    the canonical sorted (name, entry) ordering so the choice is
+    independent of replacement state.
+    """
+    if survival is None or not eviction_order:
+        return []
+    n = len(eviction_order)
+    k = int(round(survival.fraction * n))
+    if k <= 0:
+        return []
+    if survival.mode == "eviction":
+        return list(eviction_order[:k])
+    canon = sorted(eviction_order)
+    rng = np.random.default_rng(survival.seed)
+    idx = rng.choice(n, size=k, replace=False)
+    return [canon[i] for i in np.sort(idx)]
 
 
 class OpAccumulator:
@@ -98,9 +176,12 @@ class MemoryBackend(Protocol):
         """Write back everything (normal program termination)."""
         ...
 
-    def crash(self) -> int:
-        """Power loss: volatile contents vanish. Returns #dirty entries
-        lost."""
+    def crash(self, survival: Optional[LineSurvival] = None) -> int:
+        """Power loss: volatile contents vanish. With a
+        :class:`LineSurvival` spec, the selected dirty entries are
+        written back to the NVM image first (torn crash) and reported
+        through ``TrafficStats.note_torn_persist``. Returns #dirty
+        entries lost (dirty minus survivors)."""
         ...
 
     # -- snapshot / fork ----------------------------------------------------

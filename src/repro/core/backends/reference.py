@@ -24,7 +24,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .base import OpAccumulator as _OpAcc
+from .base import LineSurvival, OpAccumulator as _OpAcc, select_survivors
 
 __all__ = ["ReferenceLRUBackend"]
 
@@ -169,11 +169,20 @@ class ReferenceLRUBackend:
         self.store.stats.charge_batch(
             self.cfg, write_bytes=acc.wb_bytes, evict_lines=acc.evict_lines)
 
-    def crash(self) -> int:
-        lost = sum(1 for d in self._lru.values() if d)
+    def crash(self, survival: Optional[LineSurvival] = None) -> int:
+        # OrderedDict iteration order IS the eviction order (front =
+        # next victim), so the dirty keys in place are the canonical
+        # eviction_order input select_survivors expects
+        dirty = [key for key, d in self._lru.items() if d]
+        survivors = select_survivors(dirty, survival)
+        if survivors:
+            nbytes = 0
+            for name, entry in survivors:
+                nbytes += self._writeback_entry(name, entry)
+            self.store.stats.note_torn_persist(nbytes, len(survivors))
         self._lru.clear()
         self._weight_used = 0
-        return lost
+        return len(dirty) - len(survivors)
 
     # -- snapshot / fork ----------------------------------------------------
     def snapshot(self) -> object:

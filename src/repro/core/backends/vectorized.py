@@ -33,7 +33,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from .base import OpAccumulator as _OpAcc
+from .base import LineSurvival, OpAccumulator as _OpAcc, select_survivors
 
 __all__ = ["VectorizedBackend"]
 
@@ -368,8 +368,38 @@ class VectorizedBackend:
         self.store.stats.charge_batch(
             self.cfg, write_bytes=acc.wb_bytes, evict_lines=acc.evict_lines)
 
-    def crash(self) -> int:
-        lost = 0
+    def _dirty_eviction_order(self):
+        """Dirty entries as (name, entry) in replacement order: live
+        queue slots front-to-back — exactly the reference OrderedDict's
+        iteration order (stale slots are skipped by validity)."""
+        sl = slice(self._q_head, self._q_len)
+        rids = self._q_rid[sl]
+        ents = self._q_entry[sl]
+        valid, _ = self._validity(rids, ents, self._q_stamp[sl])
+        out = []
+        for i in np.flatnonzero(valid):
+            r = self._by_rid[int(rids[i])]
+            e = int(ents[i])
+            if r.dirty[e]:
+                out.append((r.name, e))
+        return out
+
+    def crash(self, survival: Optional[LineSurvival] = None) -> int:
+        # fraction 0.0 selects nothing: skip the per-slot queue walk on
+        # the dense-sweep hot path (crash is once per measure cell)
+        torn = survival is not None and survival.fraction > 0.0
+        survivors = select_survivors(
+            self._dirty_eviction_order() if torn else (), survival)
+        if survivors:
+            nbytes = 0
+            by_region: Dict[str, list] = {}
+            for name, entry in survivors:
+                by_region.setdefault(name, []).append(entry)
+            for name, entries in by_region.items():
+                nbytes += self._persist_entries(
+                    self._regions[name], np.asarray(entries, dtype=np.int64))
+            self.store.stats.note_torn_persist(nbytes, len(survivors))
+        lost = -len(survivors)
         for r in self._regions.values():
             lost += int((r.present & r.dirty).sum())
             r.present[:] = False

@@ -108,6 +108,11 @@ class TrafficStats:
     nvm_bytes_read: int = 0
     lines_flushed: int = 0
     lines_evicted: int = 0
+    # writebacks that were in flight when power failed (torn crashes
+    # with a LineSurvival spec): they reach the image but are never
+    # charged to modeled_seconds — the program did not wait for them
+    torn_bytes_persisted: int = 0
+    torn_entries_persisted: int = 0
     modeled_seconds: float = 0.0
 
     def charge_write(self, nbytes: int, cfg: NVMConfig) -> None:
@@ -143,6 +148,13 @@ class TrafficStats:
             self.modeled_seconds += clean_flush_bytes / cfg.write_bw
         self.lines_evicted += evict_lines
 
+    def note_torn_persist(self, nbytes: int, entries: int) -> None:
+        """Record the dirty-entry writebacks a torn crash completed
+        before power loss (backends call this at most once per crash).
+        Pure bookkeeping: no modeled time is charged."""
+        self.torn_bytes_persisted += nbytes
+        self.torn_entries_persisted += entries
+
     def snapshot(self) -> "TrafficStats":
         return dataclasses.replace(self)
 
@@ -152,6 +164,10 @@ class TrafficStats:
             nvm_bytes_read=self.nvm_bytes_read - prev.nvm_bytes_read,
             lines_flushed=self.lines_flushed - prev.lines_flushed,
             lines_evicted=self.lines_evicted - prev.lines_evicted,
+            torn_bytes_persisted=(self.torn_bytes_persisted
+                                  - prev.torn_bytes_persisted),
+            torn_entries_persisted=(self.torn_entries_persisted
+                                    - prev.torn_entries_persisted),
             modeled_seconds=self.modeled_seconds - prev.modeled_seconds,
         )
 
@@ -315,20 +331,28 @@ class CrashEmulator:
         self.backend.drain()
 
     # crash / recovery ---------------------------------------------------------
-    def crash(self) -> int:
+    def crash(self, survival=None) -> int:
         """Drop the volatile cache; reload every truth array from the NVM
-        image (the program must now see only what survived)."""
+        image (the program must now see only what survived).
+
+        ``survival`` (a :class:`~repro.core.backends.LineSurvival`)
+        makes the crash *torn*: a deterministic subset of the dirty
+        entries is written back to the image first — the crash-state
+        space EasyCrash samples and WITCHER enumerates — instead of the
+        all-or-nothing worst case."""
         # truth diverges from the image exactly where unwritten-back
         # dirty entries sit — plus any region whose image was rewritten
         # from non-truth data (undo-log rollback; see
         # note_image_divergence). Reloading only those regions makes a
         # crash O(diverged footprint), which dense measure-mode sweeps
         # (one crash per cell) rely on when big read-only inputs sit in
-        # the emulator.
+        # the emulator. Torn survivors only ever *narrow* the diverged
+        # span (image moves toward truth), so the same region list is
+        # still the superset to reload.
         changed = [name for name in self._truth
                    if name in self._truth_desynced
                    or self.backend.has_dirty(name)]
-        lost = self.backend.crash()
+        lost = self.backend.crash(survival)
         for name in changed:
             self._truth[name][:] = self.store.image[name]
             self._truth_epoch[name] += 1

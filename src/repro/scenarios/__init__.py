@@ -20,7 +20,12 @@ Module map:
               CheckpointBaseline machinery.
   crashplan   Declarative CrashPlan: no_crash / at_step / at_phase /
               at_fraction / seeded random batches; ``torn=True`` crashes
-              inside the step boundary (exercises rollback paths).
+              inside the step boundary (exercises rollback paths), and
+              ``torn=TornSpec(fraction, seed, mode, samples)`` makes the
+              torn crash a parameterized *line-survival* image: a seeded
+              subset of the dirty cache lines persisted before power
+              loss (the WITCHER/EasyCrash crash-state space), one cell
+              per sample.
   costmodel   StepCostProfile + mechanism_step_seconds(): the single
               source for the paper's Figs. 4/8/13 modeled mechanism
               costs, and mechanism_cases() — the canonical 7-mechanism
@@ -58,7 +63,8 @@ Ten-line tour::
                   out_json="BENCH_scenarios.json")
 """
 
-from .crashplan import CrashPlan, CrashPoint
+from ..core.backends import LineSurvival
+from .crashplan import CrashPlan, CrashPoint, TornSpec
 from .costmodel import (
     MECHANISM_CASES,
     MechanismCase,
@@ -94,6 +100,7 @@ from .strategies import (
 from .driver import (
     AVG_STEP_JITTER_FLOOR,
     DEFAULT_SWEEP_PLANS,
+    FORK_ONLY_FIELDS,
     FULL_RUN_FIELDS,
     SWEEP_ENGINES,
     SWEEP_MODES,
@@ -108,7 +115,7 @@ from .driver import (
 )
 
 __all__ = [
-    "CrashPlan", "CrashPoint",
+    "CrashPlan", "CrashPoint", "TornSpec", "LineSurvival",
     "MECHANISM_CASES", "MechanismCase", "StepCostProfile",
     "mechanism_cases", "mechanism_step_seconds",
     "cg_step_profile", "mm_step_profile", "xsbench_step_profile",
@@ -119,6 +126,7 @@ __all__ = [
     "make_strategy", "register_strategy", "strategy_names",
     "AVG_STEP_JITTER_FLOOR", "DEFAULT_SWEEP_PLANS", "SWEEP_ENGINES",
     "SWEEP_MODES", "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS",
+    "FORK_ONLY_FIELDS",
     "ScenarioResult", "classify_recovery", "deterministic_cell_dict",
     "measure_divergence_fields", "run_scenario", "sweep",
     "write_scenarios_json",

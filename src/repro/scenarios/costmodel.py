@@ -34,10 +34,23 @@ __all__ = [
     "mechanism_cases",
     "mechanism_step_seconds",
     "persist_events",
+    "survivor_writeback_seconds",
     "cg_step_profile",
     "mm_step_profile",
     "xsbench_step_profile",
 ]
+
+
+def survivor_writeback_seconds(nbytes: int, cfg: NVMConfig) -> float:
+    """Modeled NVM-write time of the dirty-line writebacks a torn crash
+    completed before power loss (``traffic.torn_bytes_persisted``).
+
+    Never charged to a run's ``modeled_seconds`` — the program did not
+    wait for in-flight evictions — but it bounds the plausibility of a
+    survival fraction: persisting those bytes must fit the power-fail
+    hold-up window, and fig_torn reports this as per-cell context.
+    """
+    return nbytes / cfg.write_bw
 
 
 @dataclasses.dataclass(frozen=True)

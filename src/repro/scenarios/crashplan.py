@@ -13,8 +13,8 @@ Supported kinds:
 
   no_crash()             run to completion
   at_step(k)             crash after step k completes (and, unless
-                         ``torn=True``, after the strategy's persistence
-                         hook for step k ran)
+                         torn, after the strategy's persistence hook
+                         for step k ran)
   at_phase(name, i)      crash after the i-th step of a named workload
                          phase ("loop1" / "loop2" for ABFT-MM)
   at_fraction(f)         crash after step floor(f * (n_steps - 1))
@@ -24,23 +24,65 @@ Supported kinds:
                          recompute-vs-crash-point curve (figs 3/7);
                          dense, so pair it with the fork sweep engine
 
-``torn=True`` models a crash *inside* the step boundary: the step's
+``torn`` models a crash *inside* the step boundary: the step's
 computation happened but the consistency mechanism's end-of-step
 persistence (undo-log commit, checkpoint, selective flush) did not —
-the case that exercises rollback paths.
+the case that exercises rollback paths. Two spellings:
+
+  torn=True              the all-or-nothing worst case: every dirty
+                         cache line is lost (the pre-TornSpec
+                         behavior, kept byte-identical);
+  torn=TornSpec(...)     parameterized line survival: a seeded subset
+                         of the dirty lines was already written back
+                         when power failed, so the crash image is one
+                         of the *torn-write* states WITCHER enumerates
+                         and EasyCrash samples. ``samples`` expands
+                         each crash step into that many cells, each
+                         with its own derived survival seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, TYPE_CHECKING
+from typing import List, Optional, Union, TYPE_CHECKING
 
 import numpy as np
+
+from ..core.backends import LineSurvival
 
 if TYPE_CHECKING:  # pragma: no cover
     from .workloads import Workload
 
-__all__ = ["CrashPlan", "CrashPoint"]
+__all__ = ["CrashPlan", "CrashPoint", "TornSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TornSpec:
+    """Parameterized sub-step torn-write crash: which fraction of the
+    dirty cache lines already persisted, chosen how, sampled how often.
+
+    ``survival_for(j)`` derives sample j's :class:`LineSurvival`
+    (effective seed = ``seed + j``), so resolution is a pure, replayable
+    function of the spec — the property tests rely on it.
+    """
+
+    fraction: float = 0.0
+    seed: int = 0
+    mode: str = "random"     # "random" | "eviction" (see LineSurvival)
+    samples: int = 1
+
+    def __post_init__(self):
+        # LineSurvival owns fraction/mode validation
+        LineSurvival(self.fraction, self.seed, self.mode)
+        if self.samples < 1:
+            raise ValueError("samples must be >= 1")
+
+    def survival_for(self, sample: int) -> LineSurvival:
+        return LineSurvival(self.fraction, self.seed + int(sample), self.mode)
+
+    def describe(self) -> str:
+        base = f"{self.mode}:f{self.fraction:g}:s{self.seed}"
+        return base + (f":x{self.samples}" if self.samples > 1 else "")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +91,15 @@ class CrashPoint:
 
     step: Optional[int]          # None => never crash
     torn: bool = False
+    # line-survival subset for sub-step torn crashes; None = the
+    # classic all-or-nothing crash (every dirty line lost)
+    survival: Optional[LineSurvival] = None
 
     def describe(self) -> str:
         if self.step is None:
             return "no_crash"
+        if self.survival is not None:
+            return f"step={self.step}:torn[{self.survival.describe()}]"
         return f"step={self.step}" + (":torn" if self.torn else "")
 
 
@@ -65,7 +112,7 @@ class CrashPlan:
     fraction: Optional[float] = None
     count: int = 1
     seed: int = 0
-    torn: bool = False
+    torn: Union[bool, TornSpec] = False
 
     # -- constructors ---------------------------------------------------------
     @classmethod
@@ -73,46 +120,60 @@ class CrashPlan:
         return cls(kind="none")
 
     @classmethod
-    def at_step(cls, step: int, torn: bool = False) -> "CrashPlan":
+    def at_step(cls, step: int,
+                torn: Union[bool, TornSpec] = False) -> "CrashPlan":
         if step < 0:
             raise ValueError("crash step must be >= 0")
         return cls(kind="step", step=int(step), torn=torn)
 
     @classmethod
-    def at_phase(cls, phase: str, index: int, torn: bool = False) -> "CrashPlan":
+    def at_phase(cls, phase: str, index: int,
+                 torn: Union[bool, TornSpec] = False) -> "CrashPlan":
         return cls(kind="phase", phase=phase, index=int(index), torn=torn)
 
     @classmethod
-    def at_fraction(cls, fraction: float, torn: bool = False) -> "CrashPlan":
+    def at_fraction(cls, fraction: float,
+                    torn: Union[bool, TornSpec] = False) -> "CrashPlan":
         if not 0.0 <= fraction <= 1.0:
             raise ValueError("fraction must be in [0, 1]")
         return cls(kind="fraction", fraction=float(fraction), torn=torn)
 
     @classmethod
     def random(cls, count: int = 1, seed: int = 0,
-               torn: bool = False) -> "CrashPlan":
+               torn: Union[bool, TornSpec] = False) -> "CrashPlan":
         if count < 1:
             raise ValueError("count must be >= 1")
         return cls(kind="random", count=int(count), seed=int(seed), torn=torn)
 
     @classmethod
-    def at_every_step(cls, torn: bool = False) -> "CrashPlan":
+    def at_every_step(cls, torn: Union[bool, TornSpec] = False) -> "CrashPlan":
         return cls(kind="every", torn=torn)
 
     # -- grounding ------------------------------------------------------------
+    def _points_at(self, step: int) -> List[CrashPoint]:
+        """Expand one grounded step into its crash points: a single
+        point for boolean ``torn``, one per survival sample for a
+        :class:`TornSpec` (each with its own derived seed)."""
+        if isinstance(self.torn, TornSpec):
+            return [CrashPoint(step, True, self.torn.survival_for(j))
+                    for j in range(self.torn.samples)]
+        return [CrashPoint(step, bool(self.torn))]
+
     def resolve(self, workload: "Workload") -> List[CrashPoint]:
         """Ground this plan against a set-up workload. Returns one
         :class:`CrashPoint` per scenario cell (>1 for ``random`` /
-        ``every``).
+        ``every`` / multi-sample :class:`TornSpec` plans).
 
         Contract (property-tested in tests/test_crashplan_properties.py):
         every resolved step lies in ``[0, n_steps)``, the returned steps
-        are strictly increasing (sorted, no duplicates — ``random``
-        samples without replacement and sorts), and resolution is a pure
-        function of (plan, workload step/phase layout): resolving twice,
-        or against another workload with the same layout, yields the
-        same points. Plans that cannot be grounded raise ``ValueError``
-        (``sweep()`` records these cells as skipped)."""
+        are sorted and deduplicated across *steps* (``random`` samples
+        without replacement and sorts; a TornSpec with ``samples=k``
+        repeats each step k times with k distinct survival seeds), and
+        resolution is a pure function of (plan, workload step/phase
+        layout): resolving twice, or against another workload with the
+        same layout, yields the same points. Plans that cannot be
+        grounded raise ``ValueError`` (``sweep()`` records these cells
+        as skipped)."""
         n = workload.n_steps
         if self.kind == "none":
             return [CrashPoint(None)]
@@ -121,7 +182,7 @@ class CrashPlan:
                 raise ValueError(
                     f"crash step {self.step} outside [0, {n}) for "
                     f"workload {workload.name!r}")
-            return [CrashPoint(self.step, self.torn)]
+            return self._points_at(self.step)
         if self.kind == "phase":
             phases = workload.phases()
             if self.phase not in phases:
@@ -133,10 +194,9 @@ class CrashPlan:
                 raise ValueError(
                     f"phase {self.phase!r} has {len(rng)} steps, "
                     f"index {self.index} out of range")
-            return [CrashPoint(rng[self.index], self.torn)]
+            return self._points_at(rng[self.index])
         if self.kind == "fraction":
-            return [CrashPoint(min(n - 1, int(self.fraction * (n - 1))),
-                               self.torn)]
+            return self._points_at(min(n - 1, int(self.fraction * (n - 1))))
         if self.kind == "random":
             if self.count > n:
                 raise ValueError(
@@ -146,13 +206,16 @@ class CrashPlan:
             rng = np.random.default_rng(self.seed)
             steps = sorted(int(s) for s in
                            rng.choice(n, size=self.count, replace=False))
-            return [CrashPoint(s, self.torn) for s in steps]
+            return [p for s in steps for p in self._points_at(s)]
         if self.kind == "every":
-            return [CrashPoint(s, self.torn) for s in range(n)]
+            return [p for s in range(n) for p in self._points_at(s)]
         raise ValueError(f"unknown crash plan kind {self.kind!r}")
 
     def describe(self) -> str:
-        torn = ":torn" if self.torn else ""
+        if isinstance(self.torn, TornSpec):
+            torn = f":torn[{self.torn.describe()}]"
+        else:
+            torn = ":torn" if self.torn else ""
         if self.kind == "none":
             return "no_crash"
         if self.kind == "step":

@@ -4,9 +4,13 @@ ConsistencyStrategy against any CrashPlan, and a batched sweep.
 ``run_scenario`` is the uniform experiment harness the paper's
 per-algorithm drivers used to hand-roll: set up, step, optionally crash
 (at a step boundary, or *torn* — inside the boundary, before the
-strategy's persistence hook), recover through the strategy, resume, and
+strategy's persistence hook; with a ``TornSpec`` the torn crash also
+persists a seeded subset of the dirty cache lines, see
+repro.scenarios.crashplan), recover through the strategy, resume, and
 report a :class:`ScenarioResult` with overhead / recompute / correctness
-/ traffic fields that mean the same thing in every cell.
+/ traffic fields that mean the same thing in every cell. Line-survival
+cells carry the extended ``torn_detected`` / ``torn_corrupt``
+correctness classes (:func:`classify_recovery`).
 
 ``sweep`` expands a workloads × strategies × crash-plans matrix
 (seeded ``random`` plans contribute one cell per sampled crash point),
@@ -69,8 +73,9 @@ from .workloads import Workload, make_workload
 
 __all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
            "AVG_STEP_JITTER_FLOOR", "SWEEP_ENGINES", "SWEEP_MODES",
-           "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS", "deterministic_cell_dict",
-           "measure_divergence_fields", "classify_recovery"]
+           "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS", "FORK_ONLY_FIELDS",
+           "deterministic_cell_dict", "measure_divergence_fields",
+           "classify_recovery"]
 
 # Below this measured mean step wall-time, per-step timing is dominated
 # by timer resolution / interpreter jitter, so ``avg_step_seconds``
@@ -100,12 +105,19 @@ WALL_CLOCK_FIELDS = ("wall_seconds", "avg_step_seconds", "resume_seconds")
 # dict, equal on every shared deterministic field.
 FULL_RUN_FIELDS = ("correct", "metrics", "traffic", "modeled_total_seconds")
 
+# Fields only the FORK engine can compute: byte-certification diffs the
+# recovered state against the golden-prefix snapshot at the restart
+# point, and only the fork engine holds those snapshots. Excluded from
+# the engine-invariance contract the same way wall-clock fields are.
+FORK_ONLY_FIELDS = ("state_certified",)
+
 
 def deterministic_cell_dict(res: "ScenarioResult") -> Dict[str, Any]:
-    """``to_json_dict`` minus :data:`WALL_CLOCK_FIELDS` — the payload on
-    which fork- and rerun-engine sweeps must agree cell-for-cell."""
+    """``to_json_dict`` minus :data:`WALL_CLOCK_FIELDS` and
+    :data:`FORK_ONLY_FIELDS` — the payload on which fork- and
+    rerun-engine sweeps must agree cell-for-cell."""
     d = res.to_json_dict()
-    for f in WALL_CLOCK_FIELDS:
+    for f in WALL_CLOCK_FIELDS + FORK_ONLY_FIELDS:
         d.pop(f, None)
     return d
 
@@ -121,7 +133,8 @@ def measure_divergence_fields(measured: "ScenarioResult",
 
 
 def classify_recovery(crashed: bool, crash_step: Optional[int],
-                      rec: Optional["RecoveryResult"]) -> str:
+                      rec: Optional["RecoveryResult"],
+                      survival=None) -> str:
     """Correctness class of a cell, computed from the recovered state's
     bookkeeping (the strategy's :class:`RecoveryResult`) — no tail
     execution required, so measure-mode cells carry it too:
@@ -136,16 +149,42 @@ def classify_recovery(crashed: bool, crash_step: Optional[int],
                            re-derive (steps_lost exceeds the steps the
                            tail re-executes — the XSBench Fig.-10
                            stale-counter shape)
+
+    For sub-step torn crashes (``survival`` is the crash point's
+    :class:`~repro.core.backends.LineSurvival`), two classes report
+    *detection coverage* — whether the mechanism's integrity machinery
+    caught the inconsistent crash image:
+
+      torn_detected        the mechanism positively identified torn
+                           state and excluded or repaired it (CG's
+                           invariant scan rejected versions, ABFT's
+                           checksums flagged chunks, the undo log
+                           rolled back / rejected a torn log-tail,
+                           XSBench's counters disagreed with the index)
+                           and the resume point loses nothing replay
+                           cannot re-derive;
+      torn_corrupt         torn state slipped into the recovered run:
+                           either the strategy certifies the state
+                           un-repairable (``info["state_corrupt"]``,
+                           e.g. surviving counter increments past the
+                           persisted index that replay double-counts)
+                           or work was lost that replay cannot
+                           re-derive (the lost_updates condition).
     """
     if not crashed or crash_step is None:
         return "complete"
     if rec is None:
         return "unrecovered"
+    torn_sub = survival is not None
+    if torn_sub and rec.info.get("state_corrupt"):
+        return "torn_corrupt"
     if rec.from_scratch or rec.restart_point < 0:
         return "scratch_restart"
     lost, redo = _recovery_bookkeeping(rec, crash_step)
     if lost > redo:
-        return "lost_updates"
+        return "torn_corrupt" if torn_sub else "lost_updates"
+    if torn_sub and rec.info.get("torn_flagged"):
+        return "torn_detected"
     return "consistent_rollback"
 
 
@@ -164,6 +203,11 @@ class ScenarioResult:
     plan: str
     crash_step: Optional[int]
     torn: bool
+    # line-survival spec of a sub-step torn crash ("random:f0.5:s3");
+    # None for boundary and bare-torn crashes. Part of the cell's
+    # identity: multi-sample TornSpec plans emit several cells at the
+    # same (plan, crash_step) that differ only here
+    torn_survival: Optional[str]
     steps_total: int
     steps_done: int
     restart_point: Optional[int]     # newest surviving step; -1 => scratch
@@ -184,6 +228,11 @@ class ScenarioResult:
     # recovered-state classification (see classify_recovery) — defined
     # in every mode, unlike the end-of-run ``correct`` bit
     correctness_class: str
+    # measure-mode byte-certification (fork engine only): recovered
+    # state byte-equals the golden-prefix digest at the restart point.
+    # None when not computable (rerun engine, full mode, scratch
+    # restarts, or no golden snapshot at the restart step)
+    state_certified: Optional[bool]
     metrics: Optional[Dict[str, float]]
     traffic: Optional[Dict[str, int]]
     info: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
@@ -191,7 +240,7 @@ class ScenarioResult:
     def to_json_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("info")
-        for f in FULL_RUN_FIELDS:
+        for f in FULL_RUN_FIELDS + FORK_ONLY_FIELDS + ("torn_survival",):
             if d[f] is None:
                 d.pop(f)
         return _jsonable(d)
@@ -297,9 +346,9 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     steps_done = n
 
     if crashed:
-        emu.crash()
+        emu.crash(point.survival)
         if recover:
-            rec = strat.recover(crash_step, torn)
+            rec = strat.recover(crash_step, torn, point.survival)
             restart, resume = rec.restart_point, rec.resume_step
             detect_s = rec.detect_seconds
             lost, redo = _recovery_bookkeeping(rec, crash_step)
@@ -322,6 +371,8 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         workload=wl.name, workload_params=wl.params(),
         strategy=strat.name, plan=plan_desc,
         crash_step=crash_step, torn=torn,
+        torn_survival=(point.survival.describe()
+                       if point.survival is not None else None),
         steps_total=n, steps_done=steps_done,
         restart_point=restart, resume_step=resume,
         steps_lost=lost, steps_recomputed=redo,
@@ -331,13 +382,17 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         modeled_total_seconds=emu.modeled_seconds(),
         wall_seconds=time.perf_counter() - t0,
         correct=report.correct,
-        correctness_class=classify_recovery(crashed, crash_step, rec),
+        correctness_class=classify_recovery(crashed, crash_step, rec,
+                                            point.survival),
+        state_certified=None,
         metrics=dict(report.metrics),
         traffic={
             "nvm_bytes_written": stats.nvm_bytes_written,
             "nvm_bytes_read": stats.nvm_bytes_read,
             "lines_flushed": stats.lines_flushed,
             "lines_evicted": stats.lines_evicted,
+            "torn_bytes_persisted": stats.torn_bytes_persisted,
+            "torn_entries_persisted": stats.torn_entries_persisted,
         },
         info=info,
     )
@@ -345,12 +400,19 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
 
 def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
              plan_desc: str, wall_durs: Sequence[float],
-             modeled_durs: Sequence[float], t0: float) -> ScenarioResult:
+             modeled_durs: Sequence[float], t0: float,
+             certify=None) -> ScenarioResult:
     """The mode="measure" cell evaluator: crash, run strategy recovery,
     then *compute* every recompute/restart/cost field from the recovered
     state + the cost model — no tail execution, no ``finalize()``. The
     caller must hand us the workload positioned at the crash point (the
     fork engine restores a snapshot; the rerun engine just ran forward).
+
+    ``certify`` (fork engine only) is a callable ``(RecoveryResult) ->
+    Optional[bool]`` that byte-diffs the recovered state against the
+    golden-prefix digest at the restart point — the ``state_certified``
+    field. It may leave the workload in an arbitrary restored state;
+    the measured cell is already fully determined by then.
 
     Only called for crashed cells — no_crash cells carry end-of-run
     correctness/metrics, which require ``finalize()``, so both engines
@@ -361,16 +423,27 @@ def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     avg_step = _crash_avg_step(wl, crash_step, True, wall_durs,
                                modeled_durs)
 
-    emu.crash()
-    rec = strat.recover(crash_step, torn)
+    torn_before = emu.stats.torn_bytes_persisted
+    emu.crash(point.survival)
+    torn_persisted = emu.stats.torn_bytes_persisted - torn_before
+    rec = strat.recover(crash_step, torn, point.survival)
     lost, redo = _recovery_bookkeeping(rec, crash_step)
     overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
                                               emu.cfg, crash_step + 1)
+    certified = certify(rec) if certify is not None else None
+
+    info = dict(rec.info)
+    if point.survival is not None:
+        # measure cells carry no end-of-run traffic dict; surface this
+        # crash's in-flight writebacks for fig_torn's survivor budget
+        info["torn_bytes_persisted"] = torn_persisted
 
     return ScenarioResult(
         workload=wl.name, workload_params=wl.params(),
         strategy=strat.name, plan=plan_desc,
         crash_step=crash_step, torn=torn,
+        torn_survival=(point.survival.describe()
+                       if point.survival is not None else None),
         steps_total=n, steps_done=n,
         restart_point=rec.restart_point, resume_step=rec.resume_step,
         steps_lost=lost, steps_recomputed=redo,
@@ -380,10 +453,12 @@ def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         modeled_total_seconds=None,
         wall_seconds=time.perf_counter() - t0,
         correct=None,
-        correctness_class=classify_recovery(True, crash_step, rec),
+        correctness_class=classify_recovery(True, crash_step, rec,
+                                            point.survival),
+        state_certified=certified,
         metrics=None,
         traffic=None,
-        info=dict(rec.info),
+        info=info,
     )
 
 

@@ -72,7 +72,13 @@ class ConsistencyStrategy:
         pass
 
     # -- crash recovery ----------------------------------------------------------
-    def recover(self, crash_step: int, torn: bool) -> RecoveryResult:
+    def recover(self, crash_step: int, torn: bool,
+                survival=None) -> RecoveryResult:
+        """Post-crash recovery. ``survival`` is the crash point's
+        :class:`~repro.core.backends.LineSurvival` (None for boundary
+        and all-or-nothing torn crashes) — mechanisms with their own
+        integrity machinery (the undo log's log validation) consume it;
+        the base restart-from-scratch discards torn state wholesale."""
         self.wl.reset()
         return RecoveryResult(resume_step=0, restart_point=-1,
                               redo_steps=crash_step + 1,
@@ -129,7 +135,7 @@ class AdccStrategy(ConsistencyStrategy):
     def after_step(self, i):
         self.wl.adcc_after_step(i)
 
-    def recover(self, crash_step, torn):
+    def recover(self, crash_step, torn, survival=None):
         return self.wl.adcc_recover(crash_step)
 
 
@@ -166,26 +172,33 @@ class UndoLogStrategy(ConsistencyStrategy):
             self._last_commit = i
             self._scalars = self.wl.scalar_state()
 
-    def recover(self, crash_step, torn):
-        rolled_back = self._mgr.recover()
+    def recover(self, crash_step, torn, survival=None):
+        report = self._mgr.recover()
+        rolled_back = report is not None
+        rejected = report.entries_rejected if rolled_back else 0
         if rolled_back:
             # the rollback mutated the NVM image after the crash reload:
             # re-sync program truth with the restored image
             self.wl.resync_from_nvm()
+        # torn_flagged: the mechanism positively identified inconsistent
+        # post-crash state — an open (uncommitted) tx means the data it
+        # covers may be torn, and the rollback discards it; a rejected
+        # torn log-tail is the same signal at the log level
+        info = {"rolled_back": rolled_back,
+                "log_entries_rejected": rejected,
+                "torn_flagged": rolled_back or rejected > 0}
         if self._last_commit is None:
             self.wl.reset()
             return RecoveryResult(resume_step=0, restart_point=-1,
                                   redo_steps=crash_step + 1,
                                   steps_lost=crash_step + 1,
-                                  from_scratch=True,
-                                  info={"rolled_back": rolled_back})
+                                  from_scratch=True, info=info)
         self.wl.restore(None, self._scalars, self._last_commit)
         resume = self._last_commit + 1
         return RecoveryResult(
             resume_step=resume, restart_point=self._last_commit,
             redo_steps=crash_step + 1 - resume,
-            steps_lost=crash_step - self._last_commit,
-            info={"rolled_back": rolled_back})
+            steps_lost=crash_step - self._last_commit, info=info)
 
     def snapshot(self):
         return {"last_commit": self._last_commit,
@@ -224,7 +237,7 @@ class CheckpointStrategy(ConsistencyStrategy):
             self._last_ckpt = i
             self._scalars = self.wl.scalar_state()
 
-    def recover(self, crash_step, torn):
+    def recover(self, crash_step, torn, survival=None):
         if self._last_ckpt is None:
             self.wl.reset()
             return RecoveryResult(resume_step=0, restart_point=-1,

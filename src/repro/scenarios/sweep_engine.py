@@ -32,12 +32,27 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .crashplan import CrashPlan, CrashPoint
 from .driver import ScenarioResult, _finish, _measure
 from .strategies import ConsistencyStrategy
 from .workloads import Workload
 
 __all__ = ["run_pair_forked"]
+
+
+def _digests_equal(a, b) -> bool:
+    if set(a) != set(b):
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            if not np.array_equal(np.asarray(va), np.asarray(vb)):
+                return False
+        elif va != vb:
+            return False
+    return True
 
 
 class _CellSnapshot:
@@ -73,6 +88,13 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
     (see :func:`repro.scenarios.driver._measure`), dropping the
     per-cell cost from O(restore + tail) to O(restore + recover).
     no_crash cells always take the full path (it is already tail-free).
+
+    Measure mode additionally captures a boundary snapshot at EVERY
+    executed step (not just the wanted crash points): a recovered
+    cell's restart point can land anywhere in the prefix, and the
+    byte-certification closure (``state_certified``) needs the golden
+    digest at exactly that step. Copy-on-write snapshots keep the
+    ladder O(changed state) per step.
     """
     strat.attach(wl)
     emu = wl.emu
@@ -88,6 +110,7 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
 
     # -- golden forward pass: one shared prefix execution -----------------
     need_full = (None, False) in want
+    ladder = mode == "measure"   # boundary snapshot every step (certify)
     last_point = max((s for s, _ in want if s is not None), default=-1)
     snaps: Dict[Tuple[Optional[int], bool], _CellSnapshot] = {}
     wall: List[float] = []
@@ -106,7 +129,7 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
         strat.after_step(i)
         wall.append(time.perf_counter() - ts)
         modeled.append(emu.modeled_seconds() - m0)
-        if (i, False) in want:
+        if (i, False) in want or ladder:
             snaps[(i, False)] = _CellSnapshot(wl, strat, wall[-1],
                                               modeled[-1])
         if not need_full and i == last_point:
@@ -115,6 +138,22 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
         # captured BEFORE any finalize(): finalize may charge traffic
         # (CG reads z), and each no_crash cell must pay it exactly once
         snaps[(None, False)] = _CellSnapshot(wl, strat, 0.0, 0.0)
+
+    def certify(rec) -> Optional[bool]:
+        """Byte-certification: diff the recovered state's digest against
+        the golden-prefix digest at the restart point. May leave ``wl``
+        restored to the golden state — callers restore per cell."""
+        r = rec.restart_point
+        if r is None or r < 0:
+            return None          # scratch restarts have no golden step
+        golden_snap = snaps.get((r, False))
+        if golden_snap is None:
+            return None
+        recovered = wl.restart_digest(r)
+        if recovered is None:
+            return None
+        wl.restore_snapshot(golden_snap.wl_snap)
+        return _digests_equal(recovered, wl.restart_digest(r))
 
     # -- fork one cell per (plan, point) ----------------------------------
     results: List[ScenarioResult] = []
@@ -138,7 +177,7 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
                             modeled_durs=modeled[:s] + [snap.modeled_last])
                 if mode == "measure":
                     res = _measure(wl, strat, point, plan.describe(),
-                                   t0=t0, **durs)
+                                   t0=t0, certify=certify, **durs)
                 else:
                     res = _finish(wl, strat, point, plan.describe(),
                                   recover=True, crashed=True, t0=t0, **durs)

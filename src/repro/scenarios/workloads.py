@@ -140,6 +140,26 @@ class Workload(abc.ABC):
         for r in self.live_regions():
             emu.resync_truth(r.name)
 
+    def restart_digest(self, restart_point: int):
+        """The semantically-live state at a restart point, as a dict of
+        plain arrays/scalars — what a resumed deterministic replay
+        actually reads. The fork engine's measure-mode certification
+        diffs a recovered digest against the golden-prefix digest at
+        the same step (``state_certified``): byte equality means the
+        recovery provably landed on consistent state without running
+        the tail.
+
+        The default — live-region truth views (uncharged) plus scalar
+        state — fits the plain-mode adapters and XSBench (whose loop
+        index is a resume *pointer*, already certified via
+        ``restart_point``, not replay input). Workloads whose live
+        state is a sub-view of their regions (CG's versioned iterates)
+        override. Return None to opt out of certification."""
+        d = {r.name: r.view.copy() for r in self.live_regions()}
+        for k, v in self.scalar_state().items():
+            d[f"scalar:{k}"] = v
+        return d
+
     # -- snapshot / fork ---------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:
         """Capture the complete mid-run state for the fork sweep engine:
@@ -357,7 +377,23 @@ class CGWorkload(Workload):
             detect_seconds=outcome.detection_seconds,
             redo_steps=crash_step + 1 - resume, steps_lost=lost,
             from_scratch=restart < 0,
-            info={"recovery": outcome, "iterations_lost": lost})
+            info={"recovery": outcome, "iterations_lost": lost,
+                  # the invariant scan rejected >= 1 candidate version:
+                  # it positively identified inconsistent (torn) state
+                  "torn_flagged": outcome.candidates_tested > 1})
+
+    def restart_digest(self, restart_point):
+        if self.mode != "adcc":
+            return super().restart_digest(restart_point)
+        # live state is the version-indexed iterate views, not the whole
+        # versioned regions (older/newer slots legitimately differ from
+        # the golden prefix after a torn crash); uncharged truth reads
+        impl, j = self._impl, restart_point
+        return {"p": impl.p.region.view[j + 1].copy(),
+                "q": impl.q.region.view[j].copy(),
+                "r": impl.r.region.view[j + 1].copy(),
+                "z": impl.z.region.view[j + 1].copy(),
+                "scalar:rho": self._rho}
 
     def step_cost_profile(self):
         return costmodel.cg_step_profile(self.n, self.emu.cfg.line_bytes)
@@ -496,7 +532,10 @@ class MMWorkload(Workload):
             resume_step=crash_step + 1, restart_point=crash_step,
             detect_seconds=detect, redo_steps=lost, steps_lost=lost,
             info={"crashed_in": crashed_in, "chunks_lost": lost,
-                  "corrected_elements": corrected})
+                  "corrected_elements": corrected,
+                  # checksums flagged bad chunks/blocks or corrected
+                  # elements: the ABFT machinery caught torn state
+                  "torn_flagged": lost > 0 or corrected > 0})
 
     def step_cost_profile(self):
         return costmodel.mm_step_profile(self.n, self.emu.cfg.line_bytes)
@@ -605,11 +644,19 @@ class XSBenchWorkload(Workload):
         resume_i = int(impl._index.nvm[0])
         counted = int(sum(int(c.view[0]) for c in impl._counters))
         lost = max(0, resume_i - counted) + (crashed_lookups - resume_i)
+        # counter/index mismatch is the counters' torn-state signal.
+        # counted < resume_i: updates lost (Fig. 10). counted > resume_i:
+        # increments beyond the persisted index survived a torn crash —
+        # replay from resume_i will RE-count them, so the recovered
+        # state is positively corrupt (no repair exists: the extra
+        # counts cannot be attributed and un-counted)
         return RecoveryResult(
             resume_step=resume_i, restart_point=resume_i - 1,
             redo_steps=crashed_lookups - resume_i, steps_lost=lost,
             from_scratch=resume_i == 0,
-            info={"iterations_lost": lost})
+            info={"iterations_lost": lost,
+                  "torn_flagged": counted != resume_i,
+                  "state_corrupt": counted > resume_i})
 
     def step_cost_profile(self):
         line = self.emu.cfg.line_bytes

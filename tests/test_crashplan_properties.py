@@ -23,7 +23,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import (CrashPlan, deterministic_cell_dict,
+from repro.scenarios import (CrashPlan, TornSpec, deterministic_cell_dict,
                              measure_divergence_fields, sweep)
 
 SMALL = NVMConfig(cache_bytes=256 * 1024)
@@ -136,6 +136,68 @@ def test_random_batches_engine_and_mode_invariant(count, seed, torn):
         assert measure_divergence_fields(m, f) == []
     steps = [c.crash_step for c in fork]
     assert steps == sorted(set(steps))
+
+
+@given(kind=st.sampled_from(["step", "phase", "fraction", "random",
+                             "every"]),
+       n=st.integers(1, 32), raw_step=st.integers(0, 1000),
+       frac=st.floats(0.0, 1.0), count=st.integers(1, 6),
+       seed=st.integers(0, 2**16),
+       t_frac=st.floats(0.0, 1.0), t_seed=st.integers(0, 2**16),
+       t_mode=st.sampled_from(["random", "eviction"]),
+       samples=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_tornspec_resolution_is_reproducible_and_sample_expanded(
+        kind, n, raw_step, frac, count, seed, t_frac, t_seed, t_mode,
+        samples):
+    """The TornSpec extension of the resolution contract: every base
+    step expands into exactly ``samples`` points with derived seeds
+    t_seed..t_seed+samples-1, steps stay sorted (non-decreasing, each
+    repeated ``samples`` times), every point carries torn=True and its
+    own LineSurvival, and resolution remains pure."""
+    spec = TornSpec(fraction=t_frac, seed=t_seed, mode=t_mode,
+                    samples=samples)
+    wl = _StubWorkload(n, _split_phases(n))
+    plan = _build_plan(kind, n, raw_step, frac, count, seed, spec)
+    points = plan.resolve(wl)
+    base_steps = sorted(set(p.step for p in points))
+    assert all(0 <= s < n for s in base_steps)
+    assert [p.step for p in points] == \
+        [s for s in base_steps for _ in range(samples)]
+    for p in points:
+        assert p.torn and p.survival is not None
+        assert p.survival.fraction == t_frac and p.survival.mode == t_mode
+    for s in base_steps:
+        seeds = [p.survival.seed for p in points if p.step == s]
+        assert seeds == list(range(t_seed, t_seed + samples))
+    again = plan.resolve(_StubWorkload(n, _split_phases(n)))
+    assert [(p.step, p.survival) for p in again] == \
+        [(p.step, p.survival) for p in points]
+    # the plan key embeds the spec; per-point keys embed derived seeds
+    assert f":torn[{spec.describe()}]" in plan.describe()
+    assert len({p.describe() for p in points}) == len(base_steps) * samples
+
+
+@given(t_frac=st.floats(0.0, 1.0), t_seed=st.integers(0, 256),
+       t_mode=st.sampled_from(["random", "eviction"]))
+@settings(max_examples=3, deadline=None)
+def test_torn_survival_cells_engine_and_mode_invariant(t_frac, t_seed,
+                                                       t_mode):
+    """fork == rerun == measure (where fields overlap) for seeded
+    line-survival torn crashes on a real workload."""
+    spec = TornSpec(fraction=t_frac, seed=t_seed, mode=t_mode, samples=2)
+    plan = CrashPlan.random(count=2, seed=5, torn=spec)
+    kw = dict(workloads=(("cg", {"n": 128, "iters": 6, "seed": 0}),),
+              strategies=("undo_log@2",), plans=(plan,), cfg=SMALL)
+    fork = sweep(engine="fork", **kw)
+    rerun = sweep(engine="rerun", **kw)
+    measure = sweep(engine="fork", mode="measure", **kw)
+    assert [deterministic_cell_dict(c) for c in fork] == \
+        [deterministic_cell_dict(c) for c in rerun]
+    assert len(measure) == len(fork) == 4   # 2 steps x 2 samples
+    for m, f in zip(measure, fork):
+        assert measure_divergence_fields(m, f) == []
+    assert len({(c.crash_step, c.torn_survival) for c in fork}) == 4
 
 
 def test_invalid_plan_parameters_raise():

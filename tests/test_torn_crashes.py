@@ -1,0 +1,533 @@
+"""Sub-step torn-write crash images: line survival from backend to sweep.
+
+Covers the full stack the TornSpec refactor touches:
+
+  * ``select_survivors`` — the one shared survivor-selection routine
+    (count rounding, eviction-prefix vs seeded-random modes, validation);
+  * backend equivalence — randomized traces with seeded survival crashes
+    must leave reference and vectorized backends byte-identical (images,
+    stats including the torn-persist counters, dirty sets, truth);
+  * emulator semantics — fraction 1.0 persists everything, fraction 0.0
+    is bit-identical to the classic all-or-nothing crash, eviction mode
+    persists queue-front lines first, crashes stay free in modeled time;
+  * TornSpec resolution — reproducible, sample-expanded, distinct
+    derived seeds; bare ``torn=True`` cells unchanged;
+  * engine/mode invariance — fork == rerun == measure cell-for-cell on
+    torn line-survival plans across strategies and both workload modes;
+  * torn correctness classes and recovery detection flags;
+  * the undo log's torn log-tail rejection;
+  * measure-mode byte-certification (``state_certified``);
+  * the BENCH_sweep trend-tracker comparison rule.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import LineSurvival, select_survivors
+from repro.core.nvm import CrashEmulator, NVMConfig
+from repro.core.transactions import TxManager
+from repro.scenarios import (
+    CrashPlan,
+    TornSpec,
+    deterministic_cell_dict,
+    measure_divergence_fields,
+    run_scenario,
+    sweep,
+)
+
+SMALL = NVMConfig(cache_bytes=512 * 1024)
+
+CG = ("cg", {"n": 1024, "iters": 8, "seed": 3})
+XS = ("xsbench", {"lookups": 400, "grid_points": 800, "n_nuclides": 8,
+                  "n_materials": 6, "max_nuclides_per_material": 4,
+                  "flush_every_frac": 0.02, "seed": 7})
+
+
+# ---------------------------------------------------------------------------
+# survivor selection
+# ---------------------------------------------------------------------------
+
+class TestSelectSurvivors:
+    ORDER = [("b", 3), ("a", 0), ("a", 2), ("b", 1), ("a", 1)]
+
+    def test_none_and_zero_fraction_select_nothing(self):
+        assert select_survivors(self.ORDER, None) == []
+        assert select_survivors(self.ORDER, LineSurvival(0.0, 1)) == []
+        assert select_survivors([], LineSurvival(1.0, 1)) == []
+
+    def test_full_fraction_selects_everything(self):
+        ev = select_survivors(self.ORDER, LineSurvival(1.0, 0, "eviction"))
+        assert ev == self.ORDER
+        rnd = select_survivors(self.ORDER, LineSurvival(1.0, 0, "random"))
+        assert sorted(rnd) == sorted(self.ORDER)
+
+    def test_eviction_mode_takes_queue_front_prefix(self):
+        for k in range(1, len(self.ORDER) + 1):
+            frac = k / len(self.ORDER)
+            got = select_survivors(self.ORDER,
+                                   LineSurvival(frac, 99, "eviction"))
+            assert got == self.ORDER[:k], frac
+
+    def test_count_is_rounded(self):
+        # 5 entries * 0.5 -> round(2.5) -> 2 (banker's rounding)
+        got = select_survivors(self.ORDER, LineSurvival(0.5, 0, "eviction"))
+        assert len(got) == 2
+        got = select_survivors(self.ORDER, LineSurvival(0.7, 0, "eviction"))
+        assert len(got) == round(0.7 * 5)
+
+    def test_random_mode_is_seeded_and_order_independent(self):
+        a = select_survivors(self.ORDER, LineSurvival(0.6, 7))
+        b = select_survivors(self.ORDER, LineSurvival(0.6, 7))
+        assert a == b
+        # replacement order must not matter in random mode
+        shuffled = [self.ORDER[i] for i in (4, 2, 0, 3, 1)]
+        assert select_survivors(shuffled, LineSurvival(0.6, 7)) == a
+        # different seeds eventually differ
+        order = [("r", i) for i in range(40)]
+        draws = {tuple(select_survivors(order, LineSurvival(0.5, s)))
+                 for s in range(8)}
+        assert len(draws) > 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            LineSurvival(1.5)
+        with pytest.raises(ValueError):
+            LineSurvival(-0.1)
+        with pytest.raises(ValueError):
+            LineSurvival(0.5, mode="oldest")
+        with pytest.raises(ValueError):
+            TornSpec(samples=0)
+        with pytest.raises(ValueError):
+            TornSpec(fraction=2.0)
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence under survival crashes
+# ---------------------------------------------------------------------------
+
+def _make_pair(rng):
+    cache_lines = int(rng.integers(2, 12))
+    line_bytes = int(rng.choice([32, 64]))
+    cfg = dict(cache_bytes=cache_lines * line_bytes, line_bytes=line_bytes,
+               replacement=str(rng.choice(["lru", "fifo"])))
+    ref = CrashEmulator(NVMConfig(backend="reference", **cfg))
+    vec = CrashEmulator(NVMConfig(backend="vectorized", **cfg))
+    regions = []
+    for i in range(int(rng.integers(2, 4))):
+        n = int(rng.integers(8, 400))
+        sector = int(rng.choice([1, 1, 2]))
+        r_ref = ref.alloc(f"r{i}", (n,), np.float64, sector_lines=sector)
+        r_vec = vec.alloc(f"r{i}", (n,), np.float64, sector_lines=sector)
+        regions.append((f"r{i}", n, r_ref, r_vec))
+    return ref, vec, regions
+
+
+def _assert_pair_same(ref, vec, regions, ctx):
+    import dataclasses
+    for field in dataclasses.fields(ref.stats):
+        a, b = getattr(ref.stats, field.name), getattr(vec.stats, field.name)
+        assert a == b, f"{ctx}: stats.{field.name}: ref={a} vec={b}"
+    for name, _n, a, b in regions:
+        assert np.array_equal(ref.store.image[name], vec.store.image[name]), \
+            f"{ctx}: image {name}"
+        assert np.array_equal(a.view, b.view), f"{ctx}: truth {name}"
+        assert np.array_equal(ref.backend.dirty_entries(name),
+                              vec.backend.dirty_entries(name)), \
+            f"{ctx}: dirty {name}"
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_randomized_traces_with_survival_crashes_are_equivalent(seed):
+    rng = np.random.default_rng(1000 + seed)
+    ref, vec, regions = _make_pair(rng)
+    for step in range(90):
+        name, n, r_ref, r_vec = regions[int(rng.integers(0, len(regions)))]
+        op = rng.random()
+        ctx = f"seed={seed} step={step} region={name}"
+        if op < 0.55:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            val = rng.uniform(-10, 10, size=hi - lo)
+            r_ref[lo:hi] = val
+            r_vec[lo:hi] = val
+        elif op < 0.75:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            assert np.array_equal(r_ref[lo:hi], r_vec[lo:hi]), ctx
+        elif op < 0.85:
+            r_ref.flush()
+            r_vec.flush()
+        else:
+            survival = LineSurvival(
+                fraction=float(rng.choice([0.0, 0.25, 0.5, 0.75, 1.0])),
+                seed=int(rng.integers(0, 1 << 16)),
+                mode=str(rng.choice(["random", "eviction"])))
+            lost_ref = ref.crash(survival)
+            lost_vec = vec.crash(survival)
+            assert lost_ref == lost_vec, (ctx, survival)
+        _assert_pair_same(ref, vec, regions, ctx)
+
+
+# ---------------------------------------------------------------------------
+# emulator-level torn semantics
+# ---------------------------------------------------------------------------
+
+class TestTornCrashSemantics:
+    def _emu(self, backend, cache_lines=64):
+        return CrashEmulator(NVMConfig(backend=backend,
+                                       cache_bytes=cache_lines * 64,
+                                       line_bytes=64))
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_full_survival_persists_every_dirty_line(self, backend):
+        emu = self._emu(backend)
+        r = emu.alloc("x", (64,), np.float64)
+        vals = np.arange(64.0)
+        r[...] = vals
+        before = emu.modeled_seconds()
+        lost = emu.crash(LineSurvival(1.0, seed=5))
+        assert lost == 0
+        assert np.array_equal(r.nvm, vals)
+        assert np.array_equal(r.view, vals)     # truth reloaded = image
+        assert emu.stats.torn_bytes_persisted == vals.nbytes
+        assert emu.stats.torn_entries_persisted == 8  # 64 f64 = 8 lines
+        # in-flight writebacks are free: crash charges no modeled time
+        assert emu.modeled_seconds() == before
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_zero_fraction_is_bit_identical_to_classic_crash(self, backend):
+        def trace(emu):
+            r = emu.alloc("x", (128,), np.float64)
+            r[...] = np.arange(128.0)
+            r.flush(slice(0, 32))
+            r[40:60] = -1.0
+            return r
+
+        a, b = self._emu(backend, 4), self._emu(backend, 4)
+        ra, rb = trace(a), trace(b)
+        lost_a = a.crash()
+        lost_b = b.crash(LineSurvival(0.0, seed=3))
+        assert lost_a == lost_b
+        assert np.array_equal(ra.nvm, rb.nvm)
+        assert b.stats.torn_bytes_persisted == 0
+        import dataclasses
+        assert dataclasses.asdict(a.stats) == dataclasses.asdict(b.stats)
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_eviction_mode_persists_lru_queue_front_first(self, backend):
+        emu = self._emu(backend, cache_lines=64)  # no capacity evictions
+        r = emu.alloc("x", (40,), np.float64)     # 5 lines of 8 elems
+        for e in range(5):
+            r[e * 8:(e + 1) * 8] = float(e + 1)
+        r[0:8] = 9.0   # re-touch entry 0: moves to LRU back
+        # eviction order now 1,2,3,4,0 -> k=1 survivor is entry 1
+        emu.crash(LineSurvival(fraction=1 / 5, mode="eviction"))
+        img = r.nvm
+        assert np.all(img[8:16] == 2.0)
+        assert np.all(img[0:8] == 0.0) and np.all(img[16:] == 0.0)
+
+    def test_survivors_identical_across_backends_after_shared_trace(self):
+        rng = np.random.default_rng(0)
+        emus = {b: self._emu(b, 8) for b in ("reference", "vectorized")}
+        regs = {b: e.alloc("x", (256,), np.float64) for b, e in emus.items()}
+        writes = [(int(lo), int(lo) + int(w))
+                  for lo, w in zip(rng.integers(0, 200, 30),
+                                   rng.integers(1, 56, 30))]
+        for lo, hi in writes:
+            val = rng.uniform(size=hi - lo)
+            for b in emus:
+                regs[b][lo:hi] = val
+        for b in emus:
+            emus[b].crash(LineSurvival(0.5, seed=42))
+        assert np.array_equal(regs["reference"].nvm, regs["vectorized"].nvm)
+
+
+# ---------------------------------------------------------------------------
+# TornSpec resolution
+# ---------------------------------------------------------------------------
+
+class TestTornSpecResolution:
+    class _Stub:
+        name = "stub"
+        n_steps = 6
+
+        def phases(self):
+            return {"main": range(6)}
+
+    def test_samples_expand_with_derived_seeds(self):
+        spec = TornSpec(fraction=0.5, seed=10, samples=3)
+        pts = CrashPlan.at_step(4, torn=spec).resolve(self._Stub())
+        assert [p.step for p in pts] == [4, 4, 4]
+        assert all(p.torn for p in pts)
+        assert [p.survival.seed for p in pts] == [10, 11, 12]
+        assert len({p.survival.describe() for p in pts}) == 3
+
+    def test_every_step_with_samples_is_step_major(self):
+        spec = TornSpec(fraction=0.25, seed=0, samples=2)
+        pts = CrashPlan.at_every_step(torn=spec).resolve(self._Stub())
+        assert [p.step for p in pts] == [s for s in range(6) for _ in "ab"]
+        again = CrashPlan.at_every_step(torn=spec).resolve(self._Stub())
+        assert [(p.step, p.survival) for p in pts] == \
+            [(p.step, p.survival) for p in again]
+
+    def test_describe_keys_are_extended_and_stable(self):
+        spec = TornSpec(fraction=0.5, seed=3, mode="eviction", samples=2)
+        plan = CrashPlan.at_fraction(0.8, torn=spec)
+        assert plan.describe() == "frac:0.8:torn[eviction:f0.5:s3:x2]"
+        (p0, p1) = plan.resolve(self._Stub())
+        assert p0.describe() == "step=4:torn[eviction:f0.5:s3]"
+        assert p1.describe() == "step=4:torn[eviction:f0.5:s4]"
+        # bare-bool spellings unchanged (backward compatibility)
+        assert CrashPlan.at_step(4, torn=True).describe() == "step:4:torn"
+        assert CrashPlan.at_step(4).resolve(self._Stub())[0].survival is None
+
+    def test_zero_fraction_spec_cells_match_bare_torn_cells(self):
+        bare = run_scenario(CG, "undo_log", CrashPlan.at_step(5, torn=True),
+                            cfg=SMALL)
+        spec = run_scenario(CG, "undo_log",
+                            CrashPlan.at_step(5, torn=TornSpec(0.0, seed=1)),
+                            cfg=SMALL)
+        db, ds = deterministic_cell_dict(bare), deterministic_cell_dict(spec)
+        # the spec opts into the torn class vocabulary (torn_detected
+        # instead of consistent_rollback); every execution-derived
+        # field — recovery, traffic, overheads, correctness — is
+        # bit-identical to the bare torn=True crash
+        assert db.pop("correctness_class") == "consistent_rollback"
+        assert ds.pop("correctness_class") == "torn_detected"
+        for d in (db, ds):
+            d.pop("plan")
+            d.pop("torn_survival", None)
+        assert db == ds
+
+
+# ---------------------------------------------------------------------------
+# engine/mode invariance on torn survival cells
+# ---------------------------------------------------------------------------
+
+class TestTornEngineInvariance:
+    WLS = (("cg", {"n": 512, "iters": 8, "seed": 3}),
+           ("xsbench", {"lookups": 200, "grid_points": 400, "n_nuclides": 8,
+                        "n_materials": 6, "max_nuclides_per_material": 4,
+                        "flush_every_frac": 0.05, "seed": 7}))
+    ALL_STRATS = ("none", "adcc", "undo_log", "checkpoint_hdd",
+                  "checkpoint_nvm", "checkpoint_nvm_dram")
+    PLANS = (
+        CrashPlan.at_fraction(0.5, torn=TornSpec(0.5, seed=4, samples=2)),
+        CrashPlan.at_fraction(0.9, torn=TornSpec(0.75, seed=9,
+                                                 mode="eviction")),
+        CrashPlan.random(count=2, seed=1, torn=TornSpec(1.0, seed=2)),
+    )
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_fork_equals_rerun_equals_measure_cell_for_cell(self, backend):
+        cfg = NVMConfig(cache_bytes=512 * 1024, backend=backend)
+        kw = dict(workloads=self.WLS, strategies=self.ALL_STRATS,
+                  plans=self.PLANS, cfg=cfg)
+        fork = sweep(engine="fork", **kw)
+        rerun = sweep(engine="rerun", **kw)
+        meas_fork = sweep(engine="fork", mode="measure", **kw)
+        meas_rerun = sweep(engine="rerun", mode="measure", **kw)
+        assert len(fork) == len(rerun) == len(meas_fork) > 0
+        for a, b in zip(fork, rerun):
+            assert deterministic_cell_dict(a) == deterministic_cell_dict(b), \
+                (a.workload, a.strategy, a.plan, a.crash_step, a.torn_survival)
+        for m, f in zip(meas_fork, fork):
+            assert measure_divergence_fields(m, f) == [], \
+                (m.workload, m.strategy, m.plan, m.crash_step, m.torn_survival)
+        assert [deterministic_cell_dict(c) for c in meas_fork] == \
+            [deterministic_cell_dict(c) for c in meas_rerun]
+
+    def test_workers_match_serial_on_torn_plans(self):
+        kw = dict(workloads=self.WLS, strategies=("adcc", "undo_log@2"),
+                  plans=self.PLANS[:1], cfg=SMALL, mode="measure")
+        serial = sweep(workers=1, **kw)
+        sharded = sweep(workers=2, **kw)
+        assert [deterministic_cell_dict(c) for c in sharded] == \
+            [deterministic_cell_dict(c) for c in serial]
+
+    def test_multi_sample_cells_are_distinct_and_traffic_tracked(self):
+        cells = sweep(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                      plans=(CrashPlan.at_step(
+                          5, torn=TornSpec(0.5, seed=0, samples=3)),),
+                      cfg=SMALL)
+        assert len(cells) == 3
+        assert len({c.torn_survival for c in cells}) == 3
+        for c in cells:
+            assert c.traffic["torn_bytes_persisted"] > 0
+            assert c.crash_step == 5 and c.torn
+
+
+# ---------------------------------------------------------------------------
+# torn correctness classes
+# ---------------------------------------------------------------------------
+
+class TestTornClasses:
+    def test_undo_log_detects_open_tx_and_rolls_back(self):
+        res = run_scenario(CG, "undo_log",
+                           CrashPlan.at_step(5, torn=TornSpec(0.5, seed=2)),
+                           cfg=SMALL)
+        assert res.correctness_class == "torn_detected"
+        assert res.info["rolled_back"] is True
+        assert res.info["log_entries_rejected"] == 0  # fenced appends
+        assert res.correct
+
+    def test_checkpoint_tolerates_torn_state_wholesale(self):
+        res = run_scenario(CG, "checkpoint_nvm@2",
+                           CrashPlan.at_step(5, torn=TornSpec(0.5, seed=2)),
+                           cfg=SMALL)
+        assert res.correctness_class == "consistent_rollback"
+        assert res.correct
+
+    def test_cg_invariant_scan_accepts_fully_survived_state(self):
+        res = run_scenario(CG, "adcc",
+                           CrashPlan.at_step(5, torn=TornSpec(1.0, seed=2)),
+                           cfg=SMALL)
+        # everything persisted: the newest version IS consistent, the
+        # scan accepts it without rejecting a candidate
+        assert res.correctness_class == "consistent_rollback"
+        assert res.correct
+
+    def test_xsbench_surviving_counters_are_torn_corrupt(self):
+        res = run_scenario(XS, "adcc",
+                           CrashPlan.at_fraction(
+                               0.6, torn=TornSpec(1.0, seed=2)),
+                           cfg=SMALL)
+        # counter increments past the persisted index survived; replay
+        # double-counts them — detected as positively corrupt state
+        assert res.correctness_class == "torn_corrupt"
+        assert res.correct is False
+        assert res.info["state_corrupt"] is True
+
+    def test_torn_classes_require_a_survival_spec(self):
+        res = run_scenario(CG, "undo_log", CrashPlan.at_step(5, torn=True),
+                           cfg=SMALL)
+        # bare torn keeps the pre-TornSpec class vocabulary
+        assert res.correctness_class == "consistent_rollback"
+
+
+# ---------------------------------------------------------------------------
+# undo-log torn log-tail rejection
+# ---------------------------------------------------------------------------
+
+class TestTornLogTail:
+    def test_corrupt_tail_entry_is_rejected_not_applied(self):
+        emu = CrashEmulator(NVMConfig(cache_bytes=4096))
+        r = emu.alloc("x", (16,), np.float64)
+        r[...] = np.arange(16.0)
+        r.flush()
+        mgr = TxManager(emu)
+        tx = mgr.begin()
+        tx.snapshot(r, slice(0, 8))
+        r[0:8] = 100.0
+        tx.snapshot(r, slice(8, 16))
+        r[8:16] = 200.0
+        r.flush()     # uncommitted values reach NVM
+        # tear the newest log entry: payload no longer matches its crc
+        name, lo, hi, old, crc = tx._log[1]
+        tx._log[1] = (name, lo, hi, old + 1.0, crc)
+        emu.crash()
+        report = mgr.recover()
+        assert report is not None
+        assert report.entries_rejected == 1
+        assert report.entries_applied == 1
+        # the valid prefix rolled back; the torn tail was discarded
+        assert np.array_equal(r.nvm[0:8], np.arange(8.0))
+        assert np.all(r.nvm[8:16] == 200.0)
+
+    def test_intact_log_rolls_back_fully(self):
+        emu = CrashEmulator(NVMConfig(cache_bytes=4096))
+        r = emu.alloc("x", (16,), np.float64)
+        r[...] = np.arange(16.0)
+        r.flush()
+        mgr = TxManager(emu)
+        tx = mgr.begin()
+        tx.snapshot(r)
+        r[...] = -5.0
+        r.flush()
+        emu.crash(LineSurvival(0.5, seed=1))
+        report = mgr.recover()
+        assert report.entries_rejected == 0 and report.entries_applied == 1
+        assert np.array_equal(r.nvm, np.arange(16.0))
+        assert mgr.recover() is None    # nothing left open
+
+
+# ---------------------------------------------------------------------------
+# measure-mode byte-certification
+# ---------------------------------------------------------------------------
+
+class TestStateCertified:
+    PLAN = CrashPlan.at_every_step(torn=TornSpec(0.5, seed=6))
+
+    def test_fork_measure_certifies_consistent_recoveries(self):
+        cells = sweep(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                      plans=(self.PLAN,), cfg=SMALL,
+                      engine="fork", mode="measure")
+        certified = [c for c in cells if c.restart_point is not None
+                     and c.restart_point >= 0]
+        assert certified, "expected checkpointed restarts"
+        assert all(c.state_certified is True for c in certified)
+        # scratch restarts have no golden step to certify against
+        assert all(c.state_certified is None for c in cells
+                   if c.restart_point is None or c.restart_point < 0)
+
+    def test_corrupt_recovery_fails_certification(self):
+        cells = sweep(workloads=(XS,), strategies=("adcc",),
+                      plans=(CrashPlan.at_fraction(
+                          0.6, torn=TornSpec(1.0, seed=2)),),
+                      cfg=SMALL, engine="fork", mode="measure")
+        (c,) = cells
+        assert c.correctness_class == "torn_corrupt"
+        assert c.state_certified is False
+
+    def test_rerun_measure_cannot_certify(self):
+        cells = sweep(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                      plans=(self.PLAN,), cfg=SMALL,
+                      engine="rerun", mode="measure")
+        assert all(c.state_certified is None for c in cells)
+
+    def test_certification_is_outside_the_engine_contract(self):
+        kw = dict(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                  plans=(self.PLAN,), cfg=SMALL, mode="measure")
+        fork = sweep(engine="fork", **kw)
+        rerun = sweep(engine="rerun", **kw)
+        for f, r in zip(fork, rerun):
+            df, dr = deterministic_cell_dict(f), deterministic_cell_dict(r)
+            assert "state_certified" not in df
+            assert df == dr
+
+    def test_full_mode_cells_do_not_certify(self):
+        cells = sweep(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                      plans=(CrashPlan.at_step(5),), cfg=SMALL,
+                      engine="fork", mode="full")
+        assert cells[0].state_certified is None
+        assert "state_certified" not in cells[0].to_json_dict()
+
+
+# ---------------------------------------------------------------------------
+# sweep-trend comparison rule (CI tooling)
+# ---------------------------------------------------------------------------
+
+class TestSweepTrend:
+    def test_compare_speedups(self):
+        import os
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+        try:
+            from benchmarks.sweep_trend import compare_speedups
+        finally:
+            sys.path.pop(0)
+        prev = {"speedup": 4.0, "measure_speedup": 10.0,
+                "total_speedup": 40.0}
+        ok = {"speedup": 3.0, "measure_speedup": 9.0, "total_speedup": 27.0}
+        assert compare_speedups(prev, ok) == []
+        bad = {"speedup": 1.5, "measure_speedup": 9.0, "total_speedup": 27.0}
+        assert len(compare_speedups(prev, bad)) == 1
+        assert "speedup" in compare_speedups(prev, bad)[0]
+        # older-schema BASELINE is skipped; a metric that vanishes from
+        # the NEW artifact is a failure (it would silently disable the
+        # gate forever otherwise)
+        assert compare_speedups({}, ok) == []
+        dropped = {"speedup": 4.0, "total_speedup": 40.0}
+        fails = compare_speedups(prev, dropped)
+        assert len(fails) == 1 and "measure_speedup" in fails[0]
+        assert compare_speedups(prev, ok, max_regression=1.05) != []
