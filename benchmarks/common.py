@@ -50,8 +50,11 @@ def emit(rows: List[Row], save_as: Optional[str] = None) -> None:
 
 def dense_figure_cli(run_fn: Callable, artifact: str, argv=None) -> None:
     """Shared ``__main__`` entry for the dense-matrix figure suites
-    (fig3/fig7): ``--smoke`` + ``--workers`` flags over a
-    ``run(smoke=, workers=)`` suite function."""
+    (fig3/fig7/fig_torn): ``--smoke`` + ``--workers`` + ``--mode`` flags
+    over a ``run(smoke=, workers=, mode=)`` suite function. With
+    ``--mode batched`` the matrix is evaluated by the batched engine and
+    the suites' gate stack pins it cell-for-cell against a fresh
+    measure-mode sweep."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -59,8 +62,12 @@ def dense_figure_cli(run_fn: Callable, artifact: str, argv=None) -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="processes for the sweep "
                          "(default: REPRO_SWEEP_WORKERS or 2)")
+    ap.add_argument("--mode", default="measure",
+                    choices=["measure", "batched"],
+                    help="cell evaluation mode (default: measure)")
     args = ap.parse_args(argv)
-    emit(run_fn(smoke=args.smoke or None, workers=args.workers),
+    emit(run_fn(smoke=args.smoke or None, workers=args.workers,
+                mode=args.mode),
          save_as=artifact)
 
 

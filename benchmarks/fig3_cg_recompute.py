@@ -66,12 +66,16 @@ def _sweep_kw(smoke: bool) -> Dict:
                 plans=PLANS, cfg=_cfg())
 
 
-def run(smoke: bool = None, workers: int = None) -> List[Row]:
+def run(smoke: bool = None, workers: int = None,
+        mode: str = "measure") -> List[Row]:
     from .scenarios_sweep import check_dense_gates, resolve_sweep_env
 
     smoke, workers = resolve_sweep_env(smoke, workers)
     kw = _sweep_kw(smoke)
-    cells = sweep(mode="measure", workers=workers, **kw)
+    cells = sweep(mode=mode, workers=workers, **kw)
+    # with mode="batched" the same gate stack pins the batched cells
+    # against a fresh measure-mode sweep cell-for-cell (the alternate-
+    # workers comparison inside) on top of the measure==fork contract.
     # parallel==serial and measure==fork gate at EVERY size; the strict
     # per-cell correctness assert only at smoke sizes — at full sizes
     # ADCC CG's approximate invariant-scan restart leaves EXACTLY

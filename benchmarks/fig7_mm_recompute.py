@@ -51,12 +51,15 @@ def _phase_of(spec, cfg: NVMConfig) -> Dict[int, str]:
     return {s: name for name, rng in probe.phases().items() for s in rng}
 
 
-def run(smoke: bool = None, workers: int = None) -> List[Row]:
+def run(smoke: bool = None, workers: int = None,
+        mode: str = "measure") -> List[Row]:
     from .scenarios_sweep import check_dense_gates, resolve_sweep_env
 
     smoke, workers = resolve_sweep_env(smoke, workers)
     kw = _sweep_kw(smoke)
-    cells = sweep(mode="measure", workers=workers, **kw)
+    cells = sweep(mode=mode, workers=workers, **kw)
+    # with mode="batched" the same gate stack pins the batched cells
+    # against a fresh measure-mode sweep cell-for-cell.
     # all gates at every size; ABFT recovery is exact (checksum
     # correction, not approximate restart), so the strict correctness
     # assert holds at full sizes too — unlike fig3

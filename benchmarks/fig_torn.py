@@ -145,12 +145,16 @@ def check_torn_gates(kw: Dict, cells, workers: int) -> None:
                 f"{(m.workload, m.strategy, m.crash_step, m.torn_survival)}")
 
 
-def run(smoke: bool = None, workers: int = None) -> List[Row]:
+def run(smoke: bool = None, workers: int = None,
+        mode: str = "measure") -> List[Row]:
     from .scenarios_sweep import resolve_sweep_env
 
     smoke, workers = resolve_sweep_env(smoke, workers)
     kw = _sweep_kw(smoke)
-    cells = sweep(mode="measure", workers=workers, **kw)
+    cells = sweep(mode=mode, workers=workers, **kw)
+    # with mode="batched" the gate stack's alternate-workers comparison
+    # pins the batched cells against a fresh measure-mode sweep
+    # cell-for-cell, on top of the usual measure==full contract
     check_torn_gates(kw, cells, workers)
 
     # detection-coverage census per (workload, strategy, mode, fraction)

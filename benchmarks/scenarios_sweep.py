@@ -13,14 +13,19 @@ This module also hosts the engine/mode comparison
 (:func:`engine_timing` / :func:`run_timing`, surfaced as the ``sweep``
 suite in benchmarks/run.py and benchmarks/sweep_timing.py): a dense
 one-crash-point-per-step matrix timed under rerun, fork, and
-fork+measure execution, emitted to ``BENCH_sweep.json``, with three
-hard gates (CI relies on all of them):
+fork+measure execution, plus the fig_torn dense torn matrix timed
+under measure vs batched, emitted to ``BENCH_sweep.json`` (the batched
+section also standalone as ``BENCH_batched.json``), with four hard
+gates (CI relies on all of them):
 
   * fork vs rerun — identical deterministic payload cell-for-cell;
   * measure vs fork — every field a measure-mode cell emits equals the
     full-execution fork cell (``measure_divergence_fields``);
   * workers>1 vs workers=1 — the sharded sweep merges to the identical
-    cell list.
+    cell list;
+  * batched vs measure — identical deterministic payload cell-for-cell
+    on the torn matrix (and batched vs its own warm-up run —
+    determinism across jit compilation states).
 """
 
 from __future__ import annotations
@@ -39,6 +44,7 @@ from .common import ART, Row, emit, write_json
 ARTIFACT = "scenarios_sweep.json"
 BENCH_JSON = os.path.join(ART, "BENCH_scenarios.json")
 BENCH_SWEEP_JSON = os.path.join(ART, "BENCH_sweep.json")
+BENCH_BATCHED_JSON = os.path.join(ART, "BENCH_batched.json")
 
 WORKLOADS = (
     ("cg", {"n": 4096, "iters": 12}),
@@ -237,6 +243,29 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         t0 = time.perf_counter()
         cells[name] = sweep(**kw, **run_kw)
         seconds[name] = time.perf_counter() - t0
+
+    # -- batched mode, timed on the fig_torn dense torn matrix ------------
+    # mode="batched" exists for exactly the matrix shape fig_torn sweeps
+    # (crash step x survival fraction x seed sample), so that is the
+    # matrix its headline speedup is recorded on. The first batched run
+    # is untimed: it is the equivalence-gate sweep AND the jit warm-up,
+    # so the one-time XLA compilation is not billed to the steady-state
+    # batched_seconds (measure mode has no compilation to warm; its
+    # timing is unaffected by run order).
+    from .fig_torn import _sweep_kw as torn_sweep_kw
+    tkw = torn_sweep_kw(smoke)
+    batched_warm = sweep(engine="fork", mode="batched", **tkw)
+    t0 = time.perf_counter()
+    torn_measure = sweep(mode="measure", **tkw)
+    torn_measure_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    torn_batched = sweep(engine="fork", mode="batched", **tkw)
+    torn_batched_s = time.perf_counter() - t0
+    batched_div = full_divergences(torn_batched, torn_measure)
+    # the warm-up run also pins batched determinism: two batched sweeps
+    # of the same matrix must agree cell-for-cell
+    batched_div += full_divergences(torn_batched, batched_warm)
+
     return {
         "schema": "repro.scenarios.sweep_timing/v2",
         "smoke": bool(smoke),
@@ -252,6 +281,15 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         "speedup": seconds["rerun"] / max(seconds["fork"], 1e-12),
         "measure_speedup": seconds["fork"] / max(seconds["measure"], 1e-12),
         "total_speedup": seconds["rerun"] / max(seconds["measure"], 1e-12),
+        "batched_speedup": torn_measure_s / max(torn_batched_s, 1e-12),
+        "batched": {
+            "matrix": "fig_torn dense (crash step x survival fraction "
+                      "x seed sample)",
+            "cells": len(torn_batched),
+            "measure_seconds": torn_measure_s,
+            "batched_seconds": torn_batched_s,
+            "divergences": batched_div,
+        },
         "divergences": full_divergences(cells["rerun"], cells["fork"]),
         "measure_divergences": measure_divergences(cells["measure"],
                                                    cells["fork"]),
@@ -272,6 +310,7 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
     n_div = len(payload["divergences"])
     n_mdiv = len(payload["measure_divergences"])
     n_wdiv = len(payload["workers"]["divergences"])
+    n_bdiv = len(payload["batched"]["divergences"])
     rows = [
         Row("sweep/cells", payload["cells"],
             f"plans={'+'.join(payload['matrix']['plans'])}"),
@@ -289,14 +328,28 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             f"artifact={BENCH_SWEEP_JSON}"),
         Row("sweep/parallel_seconds", payload["workers"]["seconds"],
             f"measure mode, workers={payload['workers']['n']}"),
+        Row("sweep/batched_seconds", payload["batched"]["batched_seconds"],
+            f"fig_torn dense matrix, {payload['batched']['cells']} cells, "
+            "jit-warm"),
+        Row("sweep/batched_speedup", payload["batched_speedup"],
+            "batched mode over measure mode (fig_torn dense matrix)"),
         Row("sweep/divergences", n_div,
             "fork vs rerun deterministic payload mismatches (must be 0)"),
         Row("sweep/measure_divergences", n_mdiv,
             "measure-mode fields unequal to fork cells (must be 0)"),
         Row("sweep/worker_divergences", n_wdiv,
             "workers>1 vs workers=1 cell mismatches (must be 0)"),
+        Row("sweep/batched_divergences", n_bdiv,
+            "batched vs measure cell mismatches on the torn matrix "
+            "(must be 0)"),
     ]
     write_json(BENCH_SWEEP_JSON, payload)
+    write_json(BENCH_BATCHED_JSON, {
+        "schema": "repro.scenarios.batched_timing/v1",
+        "smoke": payload["smoke"],
+        "batched_speedup": payload["batched_speedup"],
+        **payload["batched"],
+    })
     if n_div:
         raise AssertionError(
             f"fork and rerun sweep engines diverged on {n_div} cells: "
@@ -312,33 +365,49 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             f"serial sweep on {n_wdiv} cells: "
             f"{payload['workers']['divergences'][:3]} "
             f"(see {BENCH_SWEEP_JSON})")
+    if n_bdiv:
+        raise AssertionError(
+            f"batched-mode cells diverged from measure-mode cells on "
+            f"{n_bdiv} cells of the torn matrix: "
+            f"{payload['batched']['divergences'][:3]} "
+            f"(see {BENCH_BATCHED_JSON})")
     return rows
 
 
-def run(smoke: bool = None, engine: str = "fork") -> List[Row]:
+def run(smoke: bool = None, engine: str = "fork",
+        mode: str = "full") -> List[Row]:
     if smoke is None:
         smoke = bool(int(os.environ.get("REPRO_SCENARIOS_SMOKE", "0")))
     workloads = SMOKE_WORKLOADS if smoke else WORKLOADS
     strategies = SMOKE_STRATEGIES if smoke else STRATEGIES
     plans = SMOKE_PLANS if smoke else PLANS
     cfg = NVMConfig(cache_bytes=1 * 1024 * 1024)
+    # non-full modes get their own artifact so the canonical full-mode
+    # BENCH_scenarios.json is never clobbered by a measure/batched leg
+    out_json = (BENCH_JSON if mode == "full"
+                else os.path.join(ART, f"BENCH_scenarios_{mode}.json"))
     cells = sweep(workloads=workloads, strategies=strategies, plans=plans,
-                  cfg=cfg, out_json=BENCH_JSON, engine=engine)
+                  cfg=cfg, out_json=out_json, engine=engine, mode=mode)
     rows = []
     n_correct = 0
     for c in cells:
         cell = f"scenarios/{c.workload}/{c.strategy}/{c.plan}"
-        n_correct += int(c.correct)
-        rows.append(Row(f"{cell}/correct", float(c.correct),
-                        f"crash_step={c.crash_step}"))
+        if c.correct is not None:   # measure/batched cells skip the tail
+            n_correct += int(c.correct)
+            rows.append(Row(f"{cell}/correct", float(c.correct),
+                            f"crash_step={c.crash_step}"))
         rows.append(Row(f"{cell}/steps_lost", c.steps_lost,
                         f"restart={c.restart_point}"))
+        derived = (f"modeled_total={c.modeled_total_seconds:.3e}s"
+                   if c.modeled_total_seconds is not None
+                   else f"mode={mode}")
         rows.append(Row(f"{cell}/overhead_seconds", c.overhead_seconds,
-                        f"modeled_total={c.modeled_total_seconds:.3e}s"))
+                        derived))
     rows.append(Row("scenarios/summary/cells", len(cells),
                     f"matrix={len(workloads)}x{len(strategies)}x{len(plans)}"))
-    rows.append(Row("scenarios/summary/correct_cells", n_correct,
-                    f"artifact={BENCH_JSON}"))
+    if mode == "full":
+        rows.append(Row("scenarios/summary/correct_cells", n_correct,
+                        f"artifact={BENCH_JSON}"))
     return rows
 
 
@@ -353,5 +422,10 @@ if __name__ == "__main__":
                     help="CI matrix: 3 workloads x 3 strategies x 2 plans")
     ap.add_argument("--engine", default="fork", choices=["fork", "rerun"],
                     help="sweep execution engine (default: fork)")
+    ap.add_argument("--mode", default="full",
+                    choices=["full", "measure", "batched"],
+                    help="cell evaluation mode (batched requires "
+                         "--engine fork)")
     args = ap.parse_args()
-    emit(run(smoke=args.smoke or None, engine=args.engine), save_as=ARTIFACT)
+    emit(run(smoke=args.smoke or None, engine=args.engine, mode=args.mode),
+         save_as=ARTIFACT)

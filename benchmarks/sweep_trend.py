@@ -11,10 +11,11 @@ noise, tight enough that an O(tail) -> O(full-run) slip cannot hide).
 
     python -m benchmarks.sweep_trend PREV.json NEW.json
 
-Exit codes: 0 = ok (including "no previous artifact yet" — the first
-run of a fresh cache seeds the baseline), 1 = regression. CI wires
-this behind an actions/cache-restored copy of the last successful
-run's BENCH_sweep.json.
+Exit codes: 0 = ok (including "no previous artifact yet" — a missing,
+empty, or corrupt baseline degrades to seeding, optionally written in
+place with ``--seed-baseline``), 1 = regression or unreadable CURRENT
+artifact. CI wires this behind an actions/cache-restored copy of the
+last successful run's BENCH_sweep.json.
 """
 
 from __future__ import annotations
@@ -25,8 +26,32 @@ import os
 import sys
 from typing import Dict, List
 
-# the speedup columns BENCH_sweep.json has carried since schema v2
-TREND_METRICS = ("speedup", "measure_speedup", "total_speedup")
+# the speedup columns BENCH_sweep.json has carried since schema v2;
+# batched_speedup arrived later, so compare_speedups tolerates baselines
+# that predate any one metric (prev-missing is skipped, new-missing is a
+# schema-drift failure)
+TREND_METRICS = ("speedup", "measure_speedup", "total_speedup",
+                 "batched_speedup")
+
+
+def load_artifact(path: str):
+    """Parse a BENCH_sweep.json, returning None for a missing, empty,
+    or corrupt file instead of raising — a half-written artifact from a
+    cancelled CI run must degrade to 'no baseline yet', not break the
+    gate forever (the cache would re-serve the corrupt file on every
+    subsequent run)."""
+    try:
+        with open(path) as fh:
+            text = fh.read()
+    except OSError:
+        return None
+    if not text.strip():
+        return None
+    try:
+        payload = json.loads(text)
+    except ValueError:
+        return None
+    return payload if isinstance(payload, dict) else None
 
 
 def compare_speedups(prev: Dict, new: Dict,
@@ -56,6 +81,16 @@ def compare_speedups(prev: Dict, new: Dict,
     return failures
 
 
+def seed_baseline(new_path: str, prev_path: str) -> None:
+    """Copy the current artifact over the baseline slot so the very
+    first run of a fresh cache (or a run after a corrupt baseline)
+    leaves a usable baseline behind even if later steps fail."""
+    os.makedirs(os.path.dirname(os.path.abspath(prev_path)), exist_ok=True)
+    with open(new_path) as src, open(prev_path, "w") as dst:
+        dst.write(src.read())
+    print(f"sweep_trend: seeded baseline {prev_path}", flush=True)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("prev", help="previous BENCH_sweep.json (baseline)")
@@ -63,19 +98,24 @@ def main(argv=None) -> int:
     ap.add_argument("--max-regression", type=float, default=2.0,
                     help="fail when a speedup drops by more than this "
                          "factor (default: 2.0)")
+    ap.add_argument("--seed-baseline", action="store_true",
+                    help="when the baseline is missing/empty/corrupt, "
+                         "copy the current artifact into its place")
     args = ap.parse_args(argv)
 
-    if not os.path.exists(args.new):
-        print(f"sweep_trend: current artifact {args.new} missing", flush=True)
+    new = load_artifact(args.new)
+    if new is None:
+        print(f"sweep_trend: current artifact {args.new} missing or "
+              f"unreadable", flush=True)
         return 1
-    with open(args.new) as fh:
-        new = json.load(fh)
-    if not os.path.exists(args.prev):
-        print(f"sweep_trend: no previous artifact at {args.prev}; "
-              f"seeding baseline from this run", flush=True)
+    prev = load_artifact(args.prev)
+    if prev is None:
+        state = "corrupt/empty" if os.path.exists(args.prev) else "missing"
+        print(f"sweep_trend: previous artifact at {args.prev} {state}; "
+              f"treating this run as the baseline", flush=True)
+        if args.seed_baseline:
+            seed_baseline(args.new, args.prev)
         return 0
-    with open(args.prev) as fh:
-        prev = json.load(fh)
     if prev.get("smoke") != new.get("smoke"):
         print("sweep_trend: smoke/full mismatch between artifacts; "
               "skipping (not comparable)", flush=True)

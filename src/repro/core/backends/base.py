@@ -54,9 +54,17 @@ from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 import numpy as np
 
 __all__ = ["MemoryBackend", "OpAccumulator", "LineSurvival",
-           "select_survivors"]
+           "select_survivors", "select_survivor_words", "entry_span",
+           "word_spans", "WORD_BYTES"]
 
 SURVIVAL_MODES = ("random", "eviction")
+SURVIVAL_GRANULARITIES = ("line", "word")
+
+# Sub-entry torn-write granularity: an 8-byte store is the natural
+# failure-atomicity unit on persistent-memory hardware (WITCHER's
+# sub-line crash states tear at machine-word boundaries, not cache-line
+# boundaries).
+WORD_BYTES = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +84,19 @@ class LineSurvival:
 
     Resolution is a pure function of (spec, dirty state): both backends
     derive the same survivor set from the same spec.
+
+    ``granularity="word"`` tears at :data:`WORD_BYTES` boundaries inside
+    each dirty entry instead of whole entries: the unit population
+    becomes every machine word of every dirty entry (still in eviction
+    order — an entry's words persist front-to-back within it), so the
+    crash image can persist half a cache line (the WITCHER sub-line
+    states a line-granularity model cannot produce).
     """
 
     fraction: float
     seed: int = 0
     mode: str = "random"
+    granularity: str = "line"
 
     def __post_init__(self):
         if not 0.0 <= self.fraction <= 1.0:
@@ -88,37 +104,97 @@ class LineSurvival:
         if self.mode not in SURVIVAL_MODES:
             raise ValueError(f"unknown survival mode {self.mode!r} "
                              f"(choose from {SURVIVAL_MODES})")
+        if self.granularity not in SURVIVAL_GRANULARITIES:
+            raise ValueError(
+                f"unknown survival granularity {self.granularity!r} "
+                f"(choose from {SURVIVAL_GRANULARITIES})")
 
     def describe(self) -> str:
-        return f"{self.mode}:f{self.fraction:g}:s{self.seed}"
+        base = f"{self.mode}:f{self.fraction:g}:s{self.seed}"
+        # line granularity keeps the historical spelling byte-identical
+        # (pinned by tests and serialized torn_survival fields)
+        return base + (":word" if self.granularity == "word" else "")
+
+
+def _select_units(units: Sequence[tuple],
+                  survival: Optional[LineSurvival]) -> List[tuple]:
+    """Survivor selection over an abstract unit population (dirty
+    entries at line granularity, their words at word granularity).
+
+    ``units`` is the population in replacement-queue order (front first
+    — the next-to-be-written-back unit leads). ``survival=None`` (the
+    classic all-or-nothing crash) selects nothing. The survivor count is
+    ``round(fraction * n)`` (banker's rounding, as python's ``round``);
+    "eviction" mode takes the queue-front prefix, "random" draws a
+    seeded uniform subset over the canonical sorted unit ordering so the
+    choice is independent of replacement state.
+    """
+    if survival is None or not units:
+        return []
+    n = len(units)
+    k = int(round(survival.fraction * n))
+    if k <= 0:
+        return []
+    if survival.mode == "eviction":
+        return list(units[:k])
+    canon = sorted(units)
+    rng = np.random.default_rng(survival.seed)
+    idx = rng.choice(n, size=k, replace=False)
+    return [canon[i] for i in np.sort(idx)]
 
 
 def select_survivors(eviction_order: Sequence[Tuple[str, int]],
                      survival: Optional[LineSurvival]
                      ) -> List[Tuple[str, int]]:
-    """The one place the surviving dirty subset is chosen.
+    """The one place the surviving dirty *entry* subset is chosen.
 
     ``eviction_order`` is every dirty entry as ``(region, entry)`` in
     replacement-queue order (front first — the next-to-be-evicted
-    entry leads). ``survival=None`` (the classic all-or-nothing crash)
-    selects nothing. The survivor count is ``round(fraction * n_dirty)``
-    (banker's rounding, as python's ``round``); "eviction" mode takes
-    the queue-front prefix, "random" draws a seeded uniform subset over
-    the canonical sorted (name, entry) ordering so the choice is
-    independent of replacement state.
+    entry leads). See :func:`_select_units` for the selection rule;
+    this is the ``granularity="line"`` path both backends call.
     """
+    return _select_units(eviction_order, survival)
+
+
+def entry_span(entry: int, elems_per_entry: int, n_elems: int
+               ) -> Tuple[int, int]:
+    """Clipped [lo, hi) element span of one cache entry of a flattened
+    region — the span a writeback persists (shared by both backends and
+    the batched evaluators, so torn-byte accounting can never drift)."""
+    lo = entry * elems_per_entry
+    return lo, min(lo + elems_per_entry, n_elems)
+
+
+def word_spans(entry: int, elems_per_entry: int, n_elems: int,
+               itemsize: int) -> List[Tuple[int, int]]:
+    """The :data:`WORD_BYTES`-sized element spans tiling one entry's
+    clipped span, front first. Elements wider than a word get one span
+    per element (a word can never split an element — region dtypes are
+    at most 8 bytes wide)."""
+    lo, hi = entry_span(entry, elems_per_entry, n_elems)
+    epw = max(1, WORD_BYTES // itemsize)
+    return [(w, min(w + epw, hi)) for w in range(lo, hi, epw)]
+
+
+def select_survivor_words(eviction_order: Sequence[Tuple[str, int]],
+                          survival: Optional[LineSurvival],
+                          geometry) -> List[Tuple[str, int, int, int]]:
+    """Word-granularity survivor selection: expand every dirty entry
+    into its word spans (eviction order outer, front-to-back within an
+    entry) and select over that population.
+
+    ``geometry(name)`` returns ``(elems_per_entry, n_elems, itemsize)``
+    for a region. Returns surviving ``(name, entry, lo, hi)`` element
+    spans; the per-entry word index ordering makes random-mode
+    selection canonical (sorted by (name, entry, lo))."""
     if survival is None or not eviction_order:
         return []
-    n = len(eviction_order)
-    k = int(round(survival.fraction * n))
-    if k <= 0:
-        return []
-    if survival.mode == "eviction":
-        return list(eviction_order[:k])
-    canon = sorted(eviction_order)
-    rng = np.random.default_rng(survival.seed)
-    idx = rng.choice(n, size=k, replace=False)
-    return [canon[i] for i in np.sort(idx)]
+    units = []
+    for name, entry in eviction_order:
+        epe, n_elems, itemsize = geometry(name)
+        for lo, hi in word_spans(entry, epe, n_elems, itemsize):
+            units.append((name, entry, lo, hi))
+    return _select_units(units, survival)
 
 
 class OpAccumulator:
@@ -218,4 +294,18 @@ class MemoryBackend(Protocol):
         predicate crash() uses per region per cell (dense measure-mode
         sweeps crash thousands of times; materializing the index array
         of every clean region there is pure waste)."""
+        ...
+
+    def dirty_eviction_order(self) -> List[Tuple[str, int]]:
+        """Every dirty entry as ``(region, entry)`` in replacement-queue
+        order (front = next victim) — the exact ``eviction_order`` input
+        :func:`select_survivors` consumes at crash time. The batched
+        sweep engine captures this alongside snapshots so survivor
+        selection can replay host-side without re-running ``crash()``."""
+        ...
+
+    def entry_geometry(self, name: str) -> Tuple[int, int, int]:
+        """``(elems_per_entry, n_elems, itemsize)`` for a registered
+        region — the span arithmetic shared with :func:`entry_span` /
+        :func:`word_spans`."""
         ...

@@ -1,0 +1,281 @@
+"""Device-math layer for the batched sweep engine (``sweep(mode="batched")``).
+
+The batched engine (repro.scenarios.batched_engine) evaluates every
+crash cell of a (workload, strategy) pair from host-side snapshots; the
+only per-cell work that is numerically heavy is integrity checking —
+CG's invariant backward-scan (orthogonality + residual per candidate
+iteration) and ABFT's per-chunk checksum verification. This module
+lifts exactly that math onto jax: the engine stacks every (cell,
+candidate) / (cell, chunk) crash-image row of a whole sweep matrix and
+gets the error magnitudes back from a handful of jit launches, routed
+through the Pallas kernels (`repro.kernels`) on TPU and plain XLA
+elsewhere.
+
+Device results are used as a *screen*, not a verdict: accumulation
+order on device differs from the host reference by a few ulps, so the
+engine accepts a device verdict only outside a safety band around the
+tolerance (certainly-ok / certainly-fail) and recomputes the borderline
+sliver with the exact host code (`repro.core.invariants`,
+`repro.core.abft`). That keeps batched cells bit-identical to
+measure-mode cells while the overwhelming majority of checks never
+touch the host path.
+
+Everything is gated on jax being importable (``have_jax``): without it
+the batched engine falls back to per-cell measure evaluation and this
+module is never exercised.
+
+Shapes are padded to a few fixed sizes (powers of two up to the
+``CHUNK_ELEMS`` budget) so jit compiles a handful of kernels per
+problem size instead of one per batch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+try:  # soft: the engine falls back to host evaluation without jax
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    _JAX_IMPORT_ERROR: Optional[BaseException] = None
+except Exception as exc:  # pragma: no cover - env without jax
+    jax = None
+    jnp = None
+    enable_x64 = None
+    _JAX_IMPORT_ERROR = exc
+
+__all__ = ["have_jax", "jax_runtime_live", "cg_route",
+           "cg_invariant_errors", "mm_chunk_stats",
+           "CHUNK_ELEMS", "GEMM_MAX_N", "SPARSE_BLOCK_ROWS"]
+
+# per-launch element budget: bounds device/host transfer buffers and
+# keeps padded launch shapes to a handful of compiled variants
+CHUNK_ELEMS = 1 << 25
+
+# largest CG system routed through the dense symmetrized-operator GEMM
+# (the TPU/Pallas route — densifying the CSR operator would dominate
+# memory beyond this); bigger systems take the engine's per-cell
+# fallback there. The sparse route has no such cliff and is ungated.
+GEMM_MAX_N = 4096
+
+
+def have_jax() -> bool:
+    """Whether the jax device path is available in this process."""
+    return jax is not None
+
+
+def jax_runtime_live() -> bool:
+    """Whether this process has already instantiated an XLA backend
+    (device buffers, compilation threads, locks). Forking a process in
+    that state deadlocks the children's device math — the sweep driver
+    switches its worker pool to spawn-start when this is true."""
+    if jax is None:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:  # pragma: no cover - private-API drift
+        return True  # conservative: assume live, pay the spawn cost
+
+
+def _require_jax() -> None:
+    if jax is None:  # pragma: no cover - env without jax
+        raise RuntimeError(
+            f"jax unavailable for batched device math: {_JAX_IMPORT_ERROR}")
+
+
+def _chunk_rows(total: int, elems_per_row: int) -> int:
+    """Fixed launch row-count: the CHUNK_ELEMS budget, or the next power
+    of two when the whole batch is smaller (so small batches reuse a
+    log-many set of compiled shapes instead of one per batch size)."""
+    cap = max(1, CHUNK_ELEMS // max(1, elems_per_row))
+    if total >= cap:
+        return cap
+    c = 1
+    while c < total:
+        c <<= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# CG invariant errors (Eq. 1 orthogonality, Eq. 2 residual)
+# ---------------------------------------------------------------------------
+
+if jax is not None:
+
+    def _cg_errors_from_Sz(P, Q, R, Z, b, Sz):
+        pq = jnp.sum(P * Q, axis=1)
+        denom = jnp.linalg.norm(P, axis=1) * jnp.linalg.norm(Q, axis=1) + 1e-300
+        orth = jnp.abs(pq) / denom
+        resid = jnp.linalg.norm(R - (b[None, :] - Sz), axis=1)
+        rel = resid / (jnp.linalg.norm(b) + 1e-300)
+        return orth, rel
+
+    @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+    def _cg_errors_dense_jit(P, Q, R, Z, b, S, *, use_pallas, interpret):
+        from ...kernels.abft_matmul.ops import gemm_batch
+
+        # S is the dense symmetrized operator 0.5*(A + A^T); stacking all
+        # candidate z rows makes the residual matvecs one GEMM launch
+        # through the Pallas fused-epilogue matmul (MXU route)
+        Sz = gemm_batch(Z, S, acc_dtype=jnp.float64,
+                        use_pallas=use_pallas, interpret=interpret)
+        return _cg_errors_from_Sz(P, Q, R, Z, b, Sz)
+
+    @jax.jit
+    def _cg_errors_sparse_jit(P, Q, R, Z, b, vals, cols):
+        # batched sparse matvec over the padded equal-width symmetrized
+        # operator (vals/cols are (n, K) row slabs, zero-padded): pure
+        # gather + multiply + reduce — O(nnz) work per candidate row
+        # where the dense GEMM route does O(n^2), and no device scatter
+        # (scatter serializes badly on CPU XLA). The MXU makes the dense
+        # route the right call on TPU; sparse wins everywhere else by
+        # the fill factor.
+        Sz = jnp.sum(Z[:, cols] * vals[None, :, :], axis=-1)
+        return _cg_errors_from_Sz(P, Q, R, Z, b, Sz)
+
+    @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+    def _mm_stats_jit(V, *, use_pallas, interpret):
+        from ...kernels.checksum_verify.ops import tile_sums_batch
+
+        data = V[:, :-1, :-1]
+        row_sums, col_sums = tile_sums_batch(
+            data, acc_dtype=jnp.float64,
+            use_pallas=use_pallas, interpret=interpret)
+        rowmax = jnp.max(jnp.abs(V[:, :-1, -1] - row_sums), axis=1)
+        colmax = jnp.max(jnp.abs(V[:, -1, :-1] - col_sums), axis=1)
+        absmax = jnp.max(jnp.abs(V), axis=(1, 2))
+        nonzero = jnp.any(V != 0, axis=(1, 2))
+        return nonzero, absmax, rowmax, colmax
+
+
+def _pad_rows(block: np.ndarray, rows: int) -> np.ndarray:
+    if block.shape[0] >= rows:
+        return block
+    # np.zeros + slice assign: np.pad's generic path is several times
+    # slower and this sits on the per-launch hot path
+    out = np.zeros((rows,) + block.shape[1:], dtype=block.dtype)
+    out[:block.shape[0]] = block
+    return out
+
+
+# fixed sparse-route launch width: every chunk is padded to this many
+# rows so jit compiles exactly one shape per (n, nnz), however the
+# caller's batch/wave sizes vary
+SPARSE_BLOCK_ROWS = 256
+
+
+def cg_route(use_pallas: Optional[bool] = None) -> str:
+    """Which residual-matvec route ``cg_invariant_errors`` will take:
+    ``"dense"`` (Pallas fused-epilogue GEMM over the densified
+    symmetrized operator — the MXU-native TPU route, subject to
+    :data:`GEMM_MAX_N`) or ``"sparse"`` (batched CSR gather/scatter —
+    O(nnz) per row, the right call on CPU/GPU XLA hosts)."""
+    if use_pallas is None:
+        from ...kernels.abft_matmul.ops import on_tpu
+        use_pallas = on_tpu()
+    return "dense" if use_pallas else "sparse"
+
+
+def cg_invariant_errors(P: np.ndarray, Q: np.ndarray, R: np.ndarray,
+                        Z: np.ndarray, b: np.ndarray, operator, *,
+                        use_pallas: Optional[bool] = None,
+                        interpret: bool = False
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched CG invariant error magnitudes over candidate rows.
+
+    P/Q/R/Z are (T, n) stacks of post-crash overlay rows — one row per
+    (cell, candidate iteration) pair. ``operator`` is the symmetrized
+    system matrix S = 0.5*(A + A^T) in the representation matching
+    :func:`cg_route`: ``("dense", S)`` densified, or
+    ``("sparse", vals, cols)`` — (n, K) equal-width row slabs of S,
+    rows zero-padded to the widest row (see
+    :func:`~repro.scenarios.batched_engine._CGAdccEvaluator._operator`).
+    Returns (orth_err (T,), resid_rel (T,)) as float64 numpy arrays:
+
+      orth_err[t]  = |p.q| / (|p||q| + 1e-300)       (vs tol 1e-7)
+      resid_rel[t] = ||r - (b - S z)|| / (||b|| + 1e-300)  (vs tol 1e-6)
+
+    the exact quantities OrthogonalityInvariant / ResidualInvariant
+    compare — up to device accumulation order, which is why callers
+    apply a certainty band before trusting a verdict.
+    """
+    _require_jax()
+    kind, *op = operator
+    T, n = P.shape
+    rows = (_chunk_rows(T, 4 * n) if kind == "dense"
+            else min(SPARSE_BLOCK_ROWS, _chunk_rows(T, 4 * n)))
+    orth = np.empty(T, dtype=np.float64)
+    rel = np.empty(T, dtype=np.float64)
+    with enable_x64():
+        bj = jnp.asarray(np.asarray(b, dtype=np.float64))
+        if kind == "dense":
+            if use_pallas is None:
+                from ...kernels.abft_matmul.ops import on_tpu
+                use_pallas = on_tpu()
+            opj = (jnp.asarray(np.asarray(op[0], dtype=np.float64)),)
+        elif kind == "sparse":
+            vals, cols = op
+            opj = (jnp.asarray(np.asarray(vals, dtype=np.float64)),
+                   jnp.asarray(np.asarray(cols, dtype=np.int32)))
+        else:
+            raise ValueError(f"unknown CG operator representation {kind!r}")
+        for lo in range(0, T, rows):
+            hi = min(lo + rows, T)
+            blocks = (jnp.asarray(_pad_rows(P[lo:hi], rows)),
+                      jnp.asarray(_pad_rows(Q[lo:hi], rows)),
+                      jnp.asarray(_pad_rows(R[lo:hi], rows)),
+                      jnp.asarray(_pad_rows(Z[lo:hi], rows)))
+            if kind == "dense":
+                o, r = _cg_errors_dense_jit(
+                    *blocks, bj, *opj, use_pallas=bool(use_pallas),
+                    interpret=bool(interpret))
+            else:
+                o, r = _cg_errors_sparse_jit(*blocks, bj, *opj)
+            orth[lo:hi] = np.asarray(o)[:hi - lo]
+            rel[lo:hi] = np.asarray(r)[:hi - lo]
+    return orth, rel
+
+
+def mm_chunk_stats(V: np.ndarray, *, use_pallas: Optional[bool] = None,
+                   interpret: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched ABFT checksum statistics over full-checksum matrices.
+
+    V is a (B, m, m) stack of post-crash chunk images (m = n+1 with the
+    checksum row/column in place) — one slab per (cell, examined chunk)
+    pair. Returns per-slab
+
+      nonzero  any element != 0 (exact on device)
+      absmax   max |V| (exact on device — no accumulation)
+      rowmax   max row-checksum residual |V[:-1,-1] - sum(data, axis=1)|
+      colmax   max col-checksum residual |V[-1,:-1] - sum(data, axis=0)|
+
+    matching ``repro.core.abft.residuals``/``verify`` up to device
+    summation order (callers apply a certainty band on rowmax/colmax;
+    nonzero and the tolerance derived from absmax are exact).
+    """
+    _require_jax()
+    if use_pallas is None:
+        from ...kernels.abft_matmul.ops import on_tpu
+        use_pallas = on_tpu()
+    B, m, _ = V.shape
+    rows = _chunk_rows(B, m * m)
+    nonzero = np.empty(B, dtype=bool)
+    absmax = np.empty(B, dtype=np.float64)
+    rowmax = np.empty(B, dtype=np.float64)
+    colmax = np.empty(B, dtype=np.float64)
+    with enable_x64():
+        for lo in range(0, B, rows):
+            hi = min(lo + rows, B)
+            nz, am, rm, cm = _mm_stats_jit(
+                jnp.asarray(_pad_rows(V[lo:hi], rows)),
+                use_pallas=bool(use_pallas), interpret=bool(interpret))
+            nonzero[lo:hi] = np.asarray(nz)[:hi - lo]
+            absmax[lo:hi] = np.asarray(am)[:hi - lo]
+            rowmax[lo:hi] = np.asarray(rm)[:hi - lo]
+            colmax[lo:hi] = np.asarray(cm)[:hi - lo]
+    return nonzero, absmax, rowmax, colmax

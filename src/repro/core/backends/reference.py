@@ -24,7 +24,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .base import LineSurvival, OpAccumulator as _OpAcc, select_survivors
+from .base import (LineSurvival, OpAccumulator as _OpAcc, select_survivors,
+                   select_survivor_words)
 
 __all__ = ["ReferenceLRUBackend"]
 
@@ -170,10 +171,9 @@ class ReferenceLRUBackend:
             self.cfg, write_bytes=acc.wb_bytes, evict_lines=acc.evict_lines)
 
     def crash(self, survival: Optional[LineSurvival] = None) -> int:
-        # OrderedDict iteration order IS the eviction order (front =
-        # next victim), so the dirty keys in place are the canonical
-        # eviction_order input select_survivors expects
-        dirty = [key for key, d in self._lru.items() if d]
+        dirty = self.dirty_eviction_order()
+        if survival is not None and survival.granularity == "word":
+            return self._crash_words(dirty, survival)
         survivors = select_survivors(dirty, survival)
         if survivors:
             nbytes = 0
@@ -183,6 +183,23 @@ class ReferenceLRUBackend:
         self._lru.clear()
         self._weight_used = 0
         return len(dirty) - len(survivors)
+
+    def _crash_words(self, dirty, survival: LineSurvival) -> int:
+        """Word-granularity torn crash: individual machine words of the
+        dirty entries persist (sub-line WITCHER crash states). An entry
+        counts as lost only if none of its words made it."""
+        words = select_survivor_words(dirty, survival, self.entry_geometry)
+        if words:
+            nbytes = 0
+            for name, _entry, lo, hi in words:
+                truth = self._truth[name]
+                self.store.persist(name, lo, hi, truth)
+                nbytes += (hi - lo) * truth.itemsize
+            self.store.stats.note_torn_persist(nbytes, len(words))
+        touched = {(name, entry) for name, entry, _lo, _hi in words}
+        self._lru.clear()
+        self._weight_used = 0
+        return len(dirty) - len(touched)
 
     # -- snapshot / fork ----------------------------------------------------
     def snapshot(self) -> object:
@@ -206,3 +223,13 @@ class ReferenceLRUBackend:
 
     def has_dirty(self, name: str) -> bool:
         return any(d for (n, _e), d in self._lru.items() if n == name)
+
+    def dirty_eviction_order(self):
+        # OrderedDict iteration order IS the eviction order (front =
+        # next victim), so the dirty keys in place are the canonical
+        # eviction_order input select_survivors expects
+        return [key for key, d in self._lru.items() if d]
+
+    def entry_geometry(self, name: str):
+        truth = self._truth[name]
+        return self._elems_per_entry(name), truth.shape[0], truth.itemsize

@@ -33,7 +33,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from .base import LineSurvival, OpAccumulator as _OpAcc, select_survivors
+from .base import (LineSurvival, OpAccumulator as _OpAcc, select_survivors,
+                   select_survivor_words)
 
 __all__ = ["VectorizedBackend"]
 
@@ -88,6 +89,12 @@ class VectorizedBackend:
         self._q_stamp = np.zeros(cap, dtype=np.int64)
         self._q_head = 0
         self._q_len = 0
+        # compaction scratch (lazily grown): _q_compact copies the live
+        # window here instead of allocating three fresh arrays per
+        # compaction — dense sweeps compact thousands of times
+        self._qc_rid = np.zeros(0, dtype=np.int64)
+        self._qc_entry = np.zeros(0, dtype=np.int64)
+        self._qc_stamp = np.zeros(0, dtype=np.int64)
 
     # -- registration ------------------------------------------------------
     def register(self, name: str, truth_flat: np.ndarray,
@@ -125,9 +132,18 @@ class VectorizedBackend:
         return valid, wts
 
     def _q_compact(self) -> None:
+        n = self._q_len - self._q_head
+        if self._qc_rid.shape[0] < n:
+            cap = max(n, 2 * self._qc_rid.shape[0])
+            self._qc_rid = np.zeros(cap, dtype=np.int64)
+            self._qc_entry = np.zeros(cap, dtype=np.int64)
+            self._qc_stamp = np.zeros(cap, dtype=np.int64)
         sl = slice(self._q_head, self._q_len)
-        rids, ents, stamps = (self._q_rid[sl].copy(), self._q_entry[sl].copy(),
-                              self._q_stamp[sl].copy())
+        rids, ents, stamps = (self._qc_rid[:n], self._qc_entry[:n],
+                              self._qc_stamp[:n])
+        np.copyto(rids, self._q_rid[sl])
+        np.copyto(ents, self._q_entry[sl])
+        np.copyto(stamps, self._q_stamp[sl])
         keep, _ = self._validity(rids, ents, stamps)
         k = int(keep.sum())
         self._q_rid[:k] = rids[keep]
@@ -388,6 +404,8 @@ class VectorizedBackend:
         # fraction 0.0 selects nothing: skip the per-slot queue walk on
         # the dense-sweep hot path (crash is once per measure cell)
         torn = survival is not None and survival.fraction > 0.0
+        if torn and survival.granularity == "word":
+            return self._crash_words(survival)
         survivors = select_survivors(
             self._dirty_eviction_order() if torn else (), survival)
         if survivors:
@@ -402,6 +420,30 @@ class VectorizedBackend:
         lost = -len(survivors)
         for r in self._regions.values():
             lost += int((r.present & r.dirty).sum())
+            r.present[:] = False
+            r.dirty[:] = False
+        self._weight_used = 0
+        self._q_head = 0
+        self._q_len = 0
+        return lost
+
+    def _crash_words(self, survival: LineSurvival) -> int:
+        """Word-granularity torn crash — mirrors the reference path:
+        surviving word spans persist through ``store.persist`` (which
+        handles image epochs), an entry counts as lost only if none of
+        its words made it."""
+        dirty = self._dirty_eviction_order()
+        words = select_survivor_words(dirty, survival, self.entry_geometry)
+        if words:
+            nbytes = 0
+            for name, _entry, lo, hi in words:
+                r = self._regions[name]
+                self.store.persist(name, lo, hi, r.truth)
+                nbytes += (hi - lo) * r.itemsize
+            self.store.stats.note_torn_persist(nbytes, len(words))
+        touched = {(name, entry) for name, entry, _lo, _hi in words}
+        lost = len(dirty) - len(touched)
+        for r in self._regions.values():
             r.present[:] = False
             r.dirty[:] = False
         self._weight_used = 0
@@ -470,3 +512,10 @@ class VectorizedBackend:
     def has_dirty(self, name: str) -> bool:
         r = self._regions[name]
         return bool(np.any(r.present & r.dirty))
+
+    def dirty_eviction_order(self):
+        return self._dirty_eviction_order()
+
+    def entry_geometry(self, name: str):
+        r = self._regions[name]
+        return r.epe, r.truth.shape[0], r.itemsize

@@ -51,8 +51,10 @@ def _abft_mm_kernel(a_ref, b_ref, c_ref, rowp_ref, colp_ref, acc_ref):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # accumulate in the scratch dtype (acc_dtype below): f32 feeds the
+    # MXU fast path, f64 the batched sweep's bit-stable CG invariants
     acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        a_ref[...], b_ref[...], preferred_element_type=acc_ref.dtype
     )
 
     @pl.when(kk == pl.num_programs(2) - 1)
@@ -65,7 +67,8 @@ def _abft_mm_kernel(a_ref, b_ref, c_ref, rowp_ref, colp_ref, acc_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "acc_dtype", "interpret"),
 )
 def abft_matmul_pallas(
     a: jax.Array,
@@ -75,13 +78,15 @@ def abft_matmul_pallas(
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     out_dtype=None,
+    acc_dtype=jnp.float32,
     interpret: bool = False,
 ):
     """C = a @ b with fused row/col checksum partials.
 
     a: (m, k), b: (k, n); m % bm == k % bk == n % bn == 0 (ops.py pads).
-    Returns (C (m,n) out_dtype, row_partials (m, n/bn) f32,
-             col_partials (m/bm, n) f32).
+    Returns (C (m,n) out_dtype, row_partials (m, n/bn) acc_dtype,
+             col_partials (m/bm, n) acc_dtype); the VMEM accumulator is
+    ``acc_dtype`` too (default f32 — the historical behavior).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -105,9 +110,9 @@ def abft_matmul_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, n), out_dtype),
-            jax.ShapeDtypeStruct((m, nj), jnp.float32),
-            jax.ShapeDtypeStruct((mi, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, nj), acc_dtype),
+            jax.ShapeDtypeStruct((mi, n), acc_dtype),
         ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(a, b)

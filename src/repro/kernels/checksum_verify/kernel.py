@@ -24,16 +24,20 @@ __all__ = ["tile_sums_pallas"]
 
 
 def _tile_sums_kernel(x_ref, rowp_ref, colp_ref):
-    x = x_ref[...].astype(jnp.float32)
+    # accumulate in the output dtype (acc_dtype below): f32 for the TPU
+    # VPU fast path, f64 when the batched sweep needs bit-stable verdicts
+    x = x_ref[...].astype(rowp_ref.dtype)
     rowp_ref[...] = jnp.sum(x, axis=1, keepdims=True)
     colp_ref[...] = jnp.sum(x, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "acc_dtype", "interpret"))
 def tile_sums_pallas(x: jax.Array, *, bm: int = 128, bn: int = 128,
-                     interpret: bool = False):
+                     acc_dtype=jnp.float32, interpret: bool = False):
     """Row/col partial sums of x (m, n) with m % bm == n % bn == 0.
-    Returns (row_partials (m, n/bn) f32, col_partials (m/bm, n) f32)."""
+    Returns (row_partials (m, n/bn), col_partials (m/bm, n)), both
+    ``acc_dtype`` (default f32 — the historical behavior)."""
     m, n = x.shape
     assert m % bm == 0 and n % bn == 0, f"unpadded ({m},{n}) vs ({bm},{bn})"
     mi, nj = m // bm, n // bn
@@ -46,8 +50,8 @@ def tile_sums_pallas(x: jax.Array, *, bm: int = 128, bn: int = 128,
             pl.BlockSpec((1, bn), lambda i, j: (i, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, nj), jnp.float32),
-            jax.ShapeDtypeStruct((mi, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, nj), acc_dtype),
+            jax.ShapeDtypeStruct((mi, n), acc_dtype),
         ],
         interpret=interpret,
     )(x)

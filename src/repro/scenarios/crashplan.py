@@ -70,18 +70,22 @@ class TornSpec:
     seed: int = 0
     mode: str = "random"     # "random" | "eviction" (see LineSurvival)
     samples: int = 1
+    granularity: str = "line"  # "line" | "word" (WITCHER sub-line states)
 
     def __post_init__(self):
-        # LineSurvival owns fraction/mode validation
-        LineSurvival(self.fraction, self.seed, self.mode)
+        # LineSurvival owns fraction/mode/granularity validation
+        LineSurvival(self.fraction, self.seed, self.mode, self.granularity)
         if self.samples < 1:
             raise ValueError("samples must be >= 1")
 
     def survival_for(self, sample: int) -> LineSurvival:
-        return LineSurvival(self.fraction, self.seed + int(sample), self.mode)
+        return LineSurvival(self.fraction, self.seed + int(sample), self.mode,
+                            self.granularity)
 
     def describe(self) -> str:
         base = f"{self.mode}:f{self.fraction:g}:s{self.seed}"
+        if self.granularity == "word":
+            base += ":word"
         return base + (f":x{self.samples}" if self.samples > 1 else "")
 
 

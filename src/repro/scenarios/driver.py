@@ -85,7 +85,7 @@ __all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
 AVG_STEP_JITTER_FLOOR = 1e-3
 
 SWEEP_ENGINES = ("fork", "rerun")
-SWEEP_MODES = ("full", "measure")
+SWEEP_MODES = ("full", "measure", "batched")
 
 # ScenarioResult fields derived from host wall-clock measurement.
 # Everything else is deterministic — modeled seconds, traffic counts,
@@ -515,7 +515,8 @@ def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
     """Run every cell of one (workload, strategy) pair. The unit of work
     both the serial loop and the multiprocess executor share — results
     come back in plan-major, point-minor order either way."""
-    from .sweep_engine import run_pair_forked  # late: avoids import cycle
+    # late imports: both engines import this module (avoids the cycle)
+    from .sweep_engine import run_pair_forked
 
     # one probe per (workload, strategy) pair grounds every plan
     probe = make_workload(wl_spec)
@@ -534,6 +535,10 @@ def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
     if not grounded:
         return [], skipped
     if engine == "fork":
+        if mode == "batched":
+            from .batched_engine import run_pair_batched
+            return (run_pair_batched(probe, strat, grounded,
+                                     progress=progress), skipped)
         return (run_pair_forked(probe, strat, grounded, progress=progress,
                                 mode=mode), skipped)
     results: List[ScenarioResult] = []
@@ -603,6 +608,17 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     and computes the recompute/restart fields from the recovered state
     (module docstring) — the cell omits :data:`FULL_RUN_FIELDS`.
 
+    ``mode="batched"`` (fork engine only) goes one step further: crashed
+    cells are evaluated analytically from the fork snapshots — torn
+    survivor selection replayed host-side, recovery derived from the
+    post-crash image, and the heavy integrity math (CG invariants, ABFT
+    checksums) dispatched as batched jax launches over ALL cells at once
+    (:mod:`repro.scenarios.batched_engine`). Deterministic fields are
+    identical to measure cells except ``state_certified`` (None — a
+    :data:`FORK_ONLY_FIELDS` member, excluded from cell comparisons).
+    Pairs the analytic evaluators don't cover fall back to per-cell
+    measure evaluation, so batched mode is always safe to request.
+
     ``workers=N`` shards the (workload, strategy) pairs across N
     processes (pairs are independent; snapshots are per-emulator) and
     merges results in deterministic pair-major order, so the cell list
@@ -624,6 +640,9 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     if mode not in SWEEP_MODES:
         raise ValueError(f"unknown sweep mode {mode!r}; "
                          f"choose from {SWEEP_MODES}")
+    if mode == "batched" and engine != "fork":
+        raise ValueError('mode="batched" requires engine="fork" — cells '
+                         "are evaluated from fork snapshots")
     if workers < 1:
         raise ValueError("workers must be >= 1")
 
@@ -639,6 +658,14 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     if workers > 1 and len(pairs) > 1:
         import multiprocessing as mp
         start = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
+        if mode == "batched":
+            from ..core.backends.batched import jax_runtime_live
+            # forking after this process has instantiated an XLA
+            # backend deadlocks the children's device math (inherited
+            # locks whose owner threads don't survive the fork), e.g.
+            # a serial batched sweep followed by a sharded one
+            if jax_runtime_live():
+                start = "spawn"
         ctx = mp.get_context(start)
         jobs = [(w, s, tuple(plans), cfg, engine, mode) for w, s in pairs]
         with ctx.Pool(processes=min(workers, len(jobs))) as pool:

@@ -1,0 +1,364 @@
+"""Batched sweep engine (``sweep(mode="batched")``) and its device math.
+
+Covers:
+
+  * cell identity — batched cells equal measure-mode cells on every
+    deterministic field, per (workload, strategy) pair, over no-crash,
+    dense torn-survival (line AND word granularity), eviction-mode and
+    multi-sample plans;
+  * mode validation — batched requires the fork engine;
+  * word-granularity refinement properties (the TornSpec
+    ``granularity="word"`` axis): at fraction 1.0 the word survivor
+    spans tile exactly the line survivor spans (same persisted bytes,
+    same crash image); at fraction 0.0 word mode is bit-identical to
+    the bare all-or-nothing crash — on the shared selection routines,
+    on both emulator backends, and through the sweep;
+  * device-math kernels — ``gemm_batch``/``tile_sums_batch`` Pallas
+    (interpret=True) vs jnp oracles, and ``cg_invariant_errors`` /
+    ``mm_chunk_stats`` dense-vs-sparse-route and vs numpy oracles.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import LineSurvival, select_survivors
+from repro.core.backends.base import (
+    entry_span,
+    select_survivor_words,
+    word_spans,
+)
+from repro.core.backends.batched import (
+    cg_invariant_errors,
+    cg_route,
+    have_jax,
+    mm_chunk_stats,
+)
+from repro.core.nvm import CrashEmulator, NVMConfig
+from repro.scenarios import (
+    CrashPlan,
+    TornSpec,
+    deterministic_cell_dict,
+    sweep,
+)
+
+SMALL = NVMConfig(cache_bytes=512 * 1024)
+
+CG = ("cg", {"n": 512, "iters": 8, "seed": 5})
+MM = ("mm", {"n": 32, "k": 8, "seed": 2})
+XS = ("xsbench", {"lookups": 80, "grid_points": 600, "n_nuclides": 8,
+                  "n_materials": 6, "max_nuclides_per_material": 4,
+                  "flush_every_frac": 0.1, "seed": 7})
+
+
+def _cell_key(c):
+    return (c.workload, c.strategy, c.plan, c.crash_step, c.torn_survival)
+
+
+# ---------------------------------------------------------------------------
+# batched == measure cell identity
+# ---------------------------------------------------------------------------
+
+class TestBatchedEqualsMeasure:
+    """The tentpole contract: every deterministic field of a batched
+    cell equals the measure-mode cell, across every analytic evaluator
+    (scratch, checkpoint, undo-log, per-workload adcc) and the
+    measure-fallback pairs alike."""
+
+    PLANS = (
+        CrashPlan.no_crash(),
+        CrashPlan.at_every_step(torn=TornSpec(0.5, seed=4, samples=2)),
+        CrashPlan.at_every_step(torn=TornSpec(1.0, seed=2)),
+        CrashPlan.at_fraction(0.6, torn=TornSpec(0.5, seed=3,
+                                                 mode="eviction")),
+        # sub-line torn images: the word-granularity axis
+        CrashPlan.at_every_step(
+            torn=TornSpec(0.5, seed=6, granularity="word")),
+        CrashPlan.at_fraction(0.8, torn=TornSpec(0.25, seed=8,
+                                                 granularity="word",
+                                                 samples=2)),
+    )
+    STRATS = ("none", "adcc", "undo_log", "checkpoint_nvm@2")
+
+    @pytest.mark.parametrize("wl", (CG, MM, XS), ids=lambda w: w[0])
+    def test_batched_equals_measure_per_pair(self, wl):
+        kw = dict(workloads=(wl,), strategies=self.STRATS,
+                  plans=self.PLANS, cfg=SMALL)
+        meas = sweep(engine="fork", mode="measure", **kw)
+        batch = sweep(engine="fork", mode="batched", **kw)
+        assert len(meas) == len(batch) > 0
+        for m, b in zip(meas, batch):
+            assert deterministic_cell_dict(b) == \
+                deterministic_cell_dict(m), _cell_key(m)
+
+    def test_batched_requires_fork_engine(self):
+        with pytest.raises(ValueError):
+            sweep(workloads=(CG,), strategies=("none",),
+                  engine="rerun", mode="batched")
+
+    def test_batched_workers_match_serial(self):
+        kw = dict(workloads=(CG,), strategies=("adcc", "undo_log"),
+                  plans=(CrashPlan.at_every_step(
+                      torn=TornSpec(0.5, seed=4)),),
+                  cfg=SMALL, mode="batched")
+        serial = sweep(workers=1, **kw)
+        sharded = sweep(workers=2, **kw)
+        assert [deterministic_cell_dict(c) for c in sharded] == \
+            [deterministic_cell_dict(c) for c in serial]
+
+    def test_batched_cells_do_not_certify(self):
+        # state_certified is a fork-measure extra; the analytic engine
+        # never replays the golden tail, so it must stay None (and out
+        # of the serialized dict), not False
+        cells = sweep(workloads=(CG,), strategies=("checkpoint_nvm@2",),
+                      plans=(CrashPlan.at_step(5,
+                                               torn=TornSpec(0.5, seed=6)),),
+                      cfg=SMALL, engine="fork", mode="batched")
+        (c,) = cells
+        assert c.state_certified is None
+        assert "state_certified" not in c.to_json_dict()
+
+
+# ---------------------------------------------------------------------------
+# word-granularity refinement properties (satellite: TornSpec word axis)
+# ---------------------------------------------------------------------------
+
+class TestWordGranularityRefinement:
+    """``granularity="word"`` refines the line model, it does not
+    change its envelope: at fraction 1.0 the selected word spans tile
+    exactly the full entry spans, and at fraction 0.0 nothing
+    survives — so the two endpoints must reproduce the line-mode and
+    bare-crash images bit for bit."""
+
+    ORDER = [("b", 3), ("a", 0), ("a", 2), ("b", 1), ("a", 1)]
+    GEOM = {"a": (8, 70, 8), "b": (8, 32, 8)}   # (epe, n_elems, itemsize)
+
+    def _geometry(self, name):
+        return self.GEOM[name]
+
+    @pytest.mark.parametrize("mode", ["random", "eviction"])
+    def test_full_fraction_word_spans_tile_line_spans(self, mode):
+        words = select_survivor_words(
+            self.ORDER, LineSurvival(1.0, seed=3, mode=mode,
+                                     granularity="word"), self._geometry)
+        lines = select_survivors(self.ORDER,
+                                 LineSurvival(1.0, seed=3, mode=mode))
+        assert sorted(lines) == sorted(self.ORDER)
+        by_entry = {}
+        for name, entry, lo, hi in words:
+            assert hi > lo
+            by_entry.setdefault((name, entry), []).append((lo, hi))
+        assert set(by_entry) == set(self.ORDER)
+        for name, entry in lines:
+            epe, n_elems, _item = self.GEOM[name]
+            spans = sorted(by_entry[(name, entry)])
+            # contiguous, non-overlapping, covering the clipped span
+            assert spans[0][0] == entry_span(entry, epe, n_elems)[0]
+            assert spans[-1][1] == entry_span(entry, epe, n_elems)[1]
+            for (_, h), (l2, _) in zip(spans, spans[1:]):
+                assert h == l2
+        # equal persisted element count -> equal persisted bytes
+        n_word_elems = sum(hi - lo for _, _, lo, hi in words)
+        n_line_elems = sum(
+            entry_span(e, *self.GEOM[n][:2])[1]
+            - entry_span(e, *self.GEOM[n][:2])[0] for n, e in lines)
+        assert n_word_elems == n_line_elems
+
+    def test_zero_fraction_selects_nothing(self):
+        for mode in ("random", "eviction"):
+            assert select_survivor_words(
+                self.ORDER, LineSurvival(0.0, seed=1, mode=mode,
+                                         granularity="word"),
+                self._geometry) == []
+        assert select_survivor_words(self.ORDER, None, self._geometry) == []
+
+    def test_word_spans_respect_itemsize_and_clipping(self):
+        # 8-byte words over f64 (itemsize 8): one element per word;
+        # the last entry of a 70-element region clips at 70
+        assert word_spans(8, 8, 70, 8) == [(i, i + 1) for i in range(64, 70)]
+        # 4-byte items: two elements per word
+        assert word_spans(0, 8, 32, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+        # an element wider than a word can never split
+        assert word_spans(0, 4, 16, 16) == [(0, 1), (1, 2), (2, 3), (3, 4)]
+
+    def _traced_emu(self, backend, seed):
+        emu = CrashEmulator(NVMConfig(backend=backend, cache_bytes=16 * 64,
+                                      line_bytes=64))
+        r = emu.alloc("x", (300,), np.float64)
+        rng = np.random.default_rng(seed)
+        for lo, w in zip(rng.integers(0, 250, 25), rng.integers(1, 40, 25)):
+            r[int(lo):int(lo) + int(w)] = rng.uniform(size=int(w))
+        return emu, r
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_emulator_full_fraction_word_image_equals_line_image(
+            self, backend, seed):
+        a, ra = self._traced_emu(backend, seed)
+        b, rb = self._traced_emu(backend, seed)
+        a.crash(LineSurvival(1.0, seed=9, granularity="line"))
+        b.crash(LineSurvival(1.0, seed=9, granularity="word"))
+        assert np.array_equal(ra.nvm, rb.nvm)
+        assert (a.stats.torn_bytes_persisted
+                == b.stats.torn_bytes_persisted > 0)
+
+    @pytest.mark.parametrize("backend", ["reference", "vectorized"])
+    def test_emulator_zero_fraction_word_equals_bare_crash(self, backend):
+        a, ra = self._traced_emu(backend, 7)
+        b, rb = self._traced_emu(backend, 7)
+        lost_a = a.crash()
+        lost_b = b.crash(LineSurvival(0.0, seed=3, granularity="word"))
+        assert lost_a == lost_b
+        assert np.array_equal(ra.nvm, rb.nvm)
+        assert b.stats.torn_bytes_persisted == 0
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_backends_agree_on_word_granularity_crashes(self, seed):
+        rng = np.random.default_rng(400 + seed)
+        frac = float(rng.choice([0.25, 0.5, 0.75]))
+        mode = str(rng.choice(["random", "eviction"]))
+        surv = LineSurvival(frac, seed=int(rng.integers(1 << 16)),
+                            mode=mode, granularity="word")
+        ref, r_ref = self._traced_emu("reference", seed)
+        vec, r_vec = self._traced_emu("vectorized", seed)
+        assert ref.crash(surv) == vec.crash(surv)
+        assert np.array_equal(r_ref.nvm, r_vec.nvm)
+        assert (ref.stats.torn_bytes_persisted
+                == vec.stats.torn_bytes_persisted)
+
+    def test_word_survival_describe_is_tagged(self):
+        assert LineSurvival(0.5, 3).describe() == "random:f0.5:s3"
+        assert LineSurvival(0.5, 3, granularity="word").describe() == \
+            "random:f0.5:s3:word"
+        with pytest.raises(ValueError):
+            LineSurvival(0.5, granularity="byte")
+
+    def test_sweep_word_fraction_endpoints_match_line_model(self):
+        # through the full stack: fraction-1.0 word cells carry the
+        # same recovery outcome as fraction-1.0 line cells; fraction
+        # 0.0 matches the line 0.0 cells (both == bare torn crash)
+        for frac in (0.0, 1.0):
+            kw = dict(workloads=(CG,), strategies=("undo_log",),
+                      cfg=SMALL, mode="measure")
+            (line,) = sweep(plans=(CrashPlan.at_step(
+                5, torn=TornSpec(frac, seed=2)),), **kw)
+            (word,) = sweep(plans=(CrashPlan.at_step(
+                5, torn=TornSpec(frac, seed=2, granularity="word")),), **kw)
+            dl = deterministic_cell_dict(line)
+            dw = deterministic_cell_dict(word)
+            for d in (dl, dw):
+                d.pop("plan")
+                d.pop("torn_survival", None)
+            assert dl == dw, frac
+
+
+# ---------------------------------------------------------------------------
+# device math vs oracles
+# ---------------------------------------------------------------------------
+
+pytestmark_jax = pytest.mark.skipif(not have_jax(),
+                                    reason="jax unavailable")
+
+
+@pytestmark_jax
+class TestBatchedDeviceMath:
+    def _cg_batch(self, seed, T=5, n=24):
+        rng = np.random.default_rng(seed)
+        P, Q, R, Z = (rng.normal(size=(T, n)) for _ in range(4))
+        b = rng.normal(size=n)
+        S = rng.normal(size=(n, n))
+        S = 0.5 * (S + S.T)
+        return P, Q, R, Z, b, S
+
+    def _sparse_of(self, S):
+        # dense matrix as full-width slabs: every column is a "nonzero"
+        n = S.shape[0]
+        cols = np.tile(np.arange(n, dtype=np.int32), (n, 1))
+        return "sparse", S.copy(), cols
+
+    def test_cg_errors_match_numpy_oracle_both_routes(self):
+        P, Q, R, Z, b, S = self._cg_batch(0)
+        want_orth = (np.abs(np.sum(P * Q, axis=1))
+                     / (np.linalg.norm(P, axis=1)
+                        * np.linalg.norm(Q, axis=1) + 1e-300))
+        want_rel = (np.linalg.norm(R - (b[None, :] - Z @ S), axis=1)
+                    / (np.linalg.norm(b) + 1e-300))
+        for op in (("dense", S), self._sparse_of(S)):
+            orth, rel = cg_invariant_errors(P, Q, R, Z, b, op,
+                                            use_pallas=False)
+            np.testing.assert_allclose(orth, want_orth, rtol=1e-12)
+            np.testing.assert_allclose(rel, want_rel, rtol=1e-10)
+
+    def test_cg_errors_dense_route_through_pallas_interpret(self):
+        P, Q, R, Z, b, S = self._cg_batch(1, T=3, n=16)
+        xla = cg_invariant_errors(P, Q, R, Z, b, ("dense", S),
+                                  use_pallas=False)
+        pal = cg_invariant_errors(P, Q, R, Z, b, ("dense", S),
+                                  use_pallas=True, interpret=True)
+        for a, p in zip(xla, pal):
+            np.testing.assert_allclose(p, a, rtol=1e-9)
+
+    def test_cg_errors_unknown_operator_kind_raises(self):
+        P, Q, R, Z, b, S = self._cg_batch(2, T=2, n=8)
+        with pytest.raises(ValueError):
+            cg_invariant_errors(P, Q, R, Z, b, ("csr", S))
+
+    def test_cg_route_spellings(self):
+        assert cg_route(use_pallas=True) == "dense"
+        assert cg_route(use_pallas=False) == "sparse"
+        assert cg_route() in ("dense", "sparse")
+
+    def _mm_batch(self, seed, B=4, m=17):
+        rng = np.random.default_rng(seed)
+        V = np.zeros((B, m, m))
+        V[:, :-1, :-1] = rng.normal(size=(B, m - 1, m - 1))
+        V[:, :-1, -1] = V[:, :-1, :-1].sum(axis=2)
+        V[:, -1, :-1] = V[:, :-1, :-1].sum(axis=1)
+        return V
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_mm_stats_match_numpy_oracle(self, use_pallas):
+        V = self._mm_batch(3)
+        V[1] = 0.0                    # an all-lost chunk image
+        V[2, 4, 5] += 7.5             # one corrupted element
+        nonzero, absmax, rowmax, colmax = mm_chunk_stats(
+            V, use_pallas=use_pallas, interpret=use_pallas)
+        np.testing.assert_array_equal(nonzero, V.any(axis=(1, 2)))
+        np.testing.assert_allclose(absmax, np.abs(V).max(axis=(1, 2)))
+        want_row = np.abs(V[:, :-1, -1]
+                          - V[:, :-1, :-1].sum(axis=2)).max(axis=1)
+        want_col = np.abs(V[:, -1, :-1]
+                          - V[:, :-1, :-1].sum(axis=1)).max(axis=1)
+        np.testing.assert_allclose(rowmax, want_row, atol=1e-9)
+        np.testing.assert_allclose(colmax, want_col, atol=1e-9)
+        # intact slabs have ~0 residual; the corrupted one stands out
+        assert rowmax[0] < 1e-9 and rowmax[2] > 1.0
+
+    def test_gemm_batch_pallas_interpret_matches_jnp(self):
+        import jax.numpy as jnp
+        from repro.kernels.abft_matmul.ops import gemm_batch
+
+        rng = np.random.default_rng(4)
+        a = jnp.asarray(rng.normal(size=(9, 33)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(33, 21)), jnp.float32)
+        got = gemm_batch(a, b, acc_dtype=jnp.float32,
+                         use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_tile_sums_batch_pallas_interpret_matches_jnp(self):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        from repro.kernels.checksum_verify.ops import tile_sums_batch
+
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(3, 18, 26)), jnp.float32)
+        # f64 accumulation needs the x64 context the engine runs under
+        with enable_x64():
+            rows, cols = tile_sums_batch(x, acc_dtype=jnp.float64,
+                                         use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(rows),
+                                   np.asarray(x, np.float64).sum(2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cols),
+                                   np.asarray(x, np.float64).sum(1),
+                                   rtol=1e-5, atol=1e-5)
