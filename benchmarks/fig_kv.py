@@ -1,0 +1,269 @@
+"""Beyond-paper figure: persistent KV serving — durability overhead vs
+throughput, and safe-fraction vs torn survival.
+
+The paper budgets algorithm-directed crash consistence at <= 8.2%
+runtime overhead on HPC kernels. This suite asks the serving-side
+version of that question: what does each mechanism cost *per
+acknowledged request*, and which of them actually honor the
+acknowledgement after a crash?
+
+Matrix: KV request-stream profiles (ETC read-heavy / UDB write-heavy,
+plus a blind-recovery UDB variant) x strategies {none, adcc, undo_log,
+checkpoint_nvm@k, shadow_snapshot@k} x (no_crash + dense torn
+``at_every_step`` plans across survival fractions), evaluated in
+measure mode through the shared sweep stack.
+
+Reported:
+
+  * per (profile, strategy): mechanism overhead in us/request and as a
+    percentage of a modeled in-memory service envelope
+    (``SERVICE_SECONDS`` per request, ~100k req/s per core — a
+    conservative memcached-class service time), plus the implied
+    throughput. The paper's <= 8.2% budget is the headline: the
+    algorithm-directed per-request strategy (``adcc``) must fit it;
+    wholesale mechanisms (full-footprint checkpoints, region-copy undo
+    logs) are reported blowing through it — the serving restatement of
+    the paper's Figs. 4/8.
+  * per (profile, strategy, survival fraction): the correctness-class
+    census and the *violation-free fraction* — cells free of
+    ``durability_violation`` / ``atomicity_violation`` /
+    ``torn_corrupt`` / ``lost_updates``.
+
+Gates (every run, smoke or full — ``check_kv_gates``):
+
+  * the shared dense-gate core: sharded merge identical, every
+    measure-cell field equals the full-execution cell;
+  * class/correctness coherence: a violation-classified cell never
+    finalizes correct; a ``complete`` cell always does;
+  * ``shadow_snapshot`` and ``adcc`` (validating) show ZERO
+    durability/atomicity violations across every crash cell;
+  * scratch-restart (``none``) shows a NONZERO ``durability_violation``
+    count — the audit actually bites;
+  * the blind-recovery variant shows at least one
+    ``atomicity_violation`` cell (the class is reachable);
+  * headline budget: adcc per-request overhead <= 8.2% of the service
+    envelope on every profile.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import Counter
+from typing import Dict, List, Tuple
+
+from repro.core.nvm import NVMConfig
+from repro.scenarios import CrashPlan, TornSpec, sweep
+
+from .common import ART, Row, write_json
+
+ARTIFACT = "fig_kv.json"
+BENCH_JSON = os.path.join(ART, "BENCH_kv.json")
+
+SEED = 31
+OVERHEAD_BUDGET_PCT = 8.2          # the paper's headline budget
+SERVICE_SECONDS = 10e-6            # modeled per-request service envelope
+
+FRACTIONS = (0.25, 0.5, 0.75)
+SMOKE_FRACTIONS = (0.5,)
+SAMPLES = 2
+
+WORKLOADS = (
+    ("kv", {"profile": "etc", "n_steps": 48, "seed": 11}),
+    ("kv", {"profile": "udb", "n_steps": 48, "seed": 11}),
+    ("kv", {"profile": "udb", "n_steps": 48, "seed": 11,
+            "policy": "blind"}),
+)
+SMOKE_WORKLOADS = (
+    ("kv", {"profile": "etc", "n_steps": 20, "seed": 11}),
+    ("kv", {"profile": "udb", "n_steps": 20, "seed": 11}),
+    ("kv", {"profile": "udb", "n_steps": 20, "seed": 11,
+            "policy": "blind"}),
+)
+STRATEGIES = ("none", "adcc", "undo_log", "checkpoint_nvm@4",
+              "shadow_snapshot")
+
+VIOLATION_CLASSES = ("durability_violation", "atomicity_violation",
+                     "torn_corrupt", "lost_updates")
+# strategies that preserve the acknowledged prefix by construction
+# (per-request persistence or interval-1 rollback): they must never
+# surface a violation cell. checkpoint_nvm@4 is the deliberate
+# counterexample — ack-on-apply plus a periodic checkpoint opens a
+# durability window, and the census reports it.
+CLEAN_STRATEGIES = ("adcc", "shadow_snapshot", "undo_log")
+
+
+def _plans(fractions) -> Tuple[CrashPlan, ...]:
+    dense = tuple(
+        CrashPlan.at_every_step(
+            torn=TornSpec(fraction=f, seed=SEED, mode="random",
+                          samples=SAMPLES))
+        for f in fractions)
+    return (CrashPlan.no_crash(),) + dense
+
+
+def _sweep_kw(smoke: bool) -> Dict:
+    wls, fr = ((SMOKE_WORKLOADS, SMOKE_FRACTIONS) if smoke
+               else (WORKLOADS, FRACTIONS))
+    return dict(workloads=wls, strategies=STRATEGIES, plans=_plans(fr),
+                cfg=NVMConfig(cache_bytes=1024 * 1024))
+
+
+def _wl_key(cell) -> str:
+    p = cell.workload_params
+    key = p.get("profile", "etc")
+    if p.get("policy", "validate") != "validate":
+        key += f"+{p['policy']}"
+    return key
+
+
+def _frac_of(cell) -> float:
+    _mode, frac, _seed = cell.torn_survival.split(":", 2)
+    return float(frac[1:])
+
+
+def overhead_table(cells) -> Dict[Tuple[str, str], Dict[str, float]]:
+    """Per (profile, strategy): us/request mechanism cost, % of the
+    service envelope, implied throughput — from the no_crash cells."""
+    base: Dict[str, float] = {}
+    totals: Dict[Tuple[str, str], float] = {}
+    steps: Dict[Tuple[str, str], int] = {}
+    for c in cells:
+        if c.crash_step is not None:
+            continue
+        key = (_wl_key(c), c.strategy)
+        totals[key] = c.modeled_total_seconds
+        steps[key] = c.workload_params["n_steps"]
+        if c.strategy == "none":
+            base[_wl_key(c)] = c.modeled_total_seconds
+    table = {}
+    for (wl, strat), total in totals.items():
+        mech_s = (total - base[wl]) / steps[(wl, strat)]
+        pct = 100.0 * mech_s / SERVICE_SECONDS
+        table[(wl, strat)] = {
+            "mechanism_us_per_request": 1e6 * mech_s,
+            "overhead_pct": pct,
+            "within_budget": pct <= OVERHEAD_BUDGET_PCT,
+            "requests_per_second": 1.0 / (SERVICE_SECONDS + mech_s),
+        }
+    return table
+
+
+def check_kv_gates(kw: Dict, cells, workers: int) -> None:
+    """The gate stack documented in the module docstring. Explicit
+    raises (not asserts): these are CI gates and must survive
+    ``python -O``."""
+    from .scenarios_sweep import run_dense_cross_checks
+
+    full = run_dense_cross_checks(kw, cells, workers)
+
+    violations: Counter = Counter()
+    atom_by_policy: Counter = Counter()
+    for c in full:
+        key = (c.workload, _wl_key(c), c.strategy, c.plan, c.crash_step)
+        if c.correctness_class in VIOLATION_CLASSES and c.correct:
+            raise AssertionError(
+                f"violation-classified cell finalized CORRECT: {key} "
+                f"class={c.correctness_class}")
+        if c.correctness_class == "complete" and not c.correct:
+            raise AssertionError(
+                f"complete cell finalized INCORRECT: {key}")
+        if c.correctness_class in ("durability_violation",
+                                   "atomicity_violation"):
+            if c.workload_params.get("policy", "validate") == "validate":
+                violations[c.strategy] += 1
+            if c.correctness_class == "atomicity_violation":
+                atom_by_policy[c.workload_params.get("policy",
+                                                     "validate")] += 1
+
+    for strat in CLEAN_STRATEGIES:
+        if violations.get(strat):
+            raise AssertionError(
+                f"{strat} surfaced {violations[strat]} durability/"
+                f"atomicity violation cells; expected zero")
+    if not violations.get("none"):
+        raise AssertionError(
+            "scratch-restart baseline shows no durability_violation "
+            "cells — the acked-prefix audit is not biting")
+    if not atom_by_policy.get("blind"):
+        raise AssertionError(
+            "blind-recovery variant surfaced no atomicity_violation "
+            "cells — the torn-visibility audit is not biting")
+    if atom_by_policy.get("validate"):
+        raise AssertionError(
+            "validating recovery surfaced atomicity_violation cells")
+
+    for (wl, strat), row in sorted(overhead_table(full).items()):
+        if strat == "adcc" and not row["within_budget"]:
+            raise AssertionError(
+                f"adcc on {wl}: {row['overhead_pct']:.2f}% per-request "
+                f"overhead exceeds the {OVERHEAD_BUDGET_PCT}% budget")
+
+
+def run(smoke: bool = None, workers: int = None,
+        mode: str = "measure") -> List[Row]:
+    from .scenarios_sweep import resolve_sweep_env
+
+    smoke, workers = resolve_sweep_env(smoke, workers)
+    kw = _sweep_kw(smoke)
+    cells = sweep(mode=mode, workers=workers, **kw)
+    check_kv_gates(kw, cells, workers)
+
+    table = overhead_table(cells)
+    census: Dict[Tuple, Counter] = {}
+    for c in cells:
+        if c.torn_survival is None:
+            continue
+        key = (_wl_key(c), c.strategy, _frac_of(c))
+        census.setdefault(key, Counter())[c.correctness_class] += 1
+
+    rows = []
+    for (wl, strat), t in sorted(table.items()):
+        prefix = f"fig_kv/{wl}/{strat}"
+        rows.append(Row(f"{prefix}/overhead_pct", t["overhead_pct"],
+                        f"{t['mechanism_us_per_request']:.3f}us/req "
+                        f"budget={OVERHEAD_BUDGET_PCT}% "
+                        f"within={t['within_budget']}"))
+        rows.append(Row(f"{prefix}/requests_per_second",
+                        t["requests_per_second"],
+                        f"service={1e6 * SERVICE_SECONDS:g}us/req"))
+    for key in sorted(census):
+        wl, strat, frac = key
+        counts = census[key]
+        total = sum(counts.values())
+        bad = sum(counts[k] for k in VIOLATION_CLASSES)
+        rows.append(Row(
+            f"fig_kv/{wl}/{strat}/f={frac:g}/violation_free_fraction",
+            (total - bad) / total,
+            " ".join(f"{k}={v}" for k, v in sorted(counts.items()))))
+
+    write_json(BENCH_JSON, {
+        "schema": "repro.scenarios.kv/v1",
+        "smoke": bool(smoke),
+        "budget_pct": OVERHEAD_BUDGET_PCT,
+        "service_seconds_per_request": SERVICE_SECONDS,
+        "matrix": {
+            "workloads": [[w, p] for w, p in kw["workloads"]],
+            "strategies": list(STRATEGIES),
+            "plans": [p.describe() for p in kw["plans"]],
+        },
+        "overhead": [
+            {"profile": wl, "strategy": strat, **t}
+            for (wl, strat), t in sorted(table.items())],
+        "coverage": [
+            {"profile": k[0], "strategy": k[1], "fraction": k[2],
+             "classes": dict(census[k])}
+            for k in sorted(census)],
+        "cells": [c.to_json_dict() for c in cells],
+    })
+    rows.append(Row("fig_kv/summary/cells", len(cells),
+                    f"artifact={BENCH_JSON}"))
+    return rows
+
+
+def main(argv=None) -> None:
+    from .common import dense_figure_cli
+    dense_figure_cli(run, ARTIFACT, argv)
+
+
+if __name__ == "__main__":
+    main()

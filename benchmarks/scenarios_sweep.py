@@ -14,9 +14,11 @@ This module also hosts the engine/mode comparison
 suite in benchmarks/run.py and benchmarks/sweep_timing.py): a dense
 one-crash-point-per-step matrix timed under rerun, fork, and
 fork+measure execution, plus the fig_torn dense torn matrix timed
-under measure vs batched, emitted to ``BENCH_sweep.json`` (the batched
-section also standalone as ``BENCH_batched.json``), with four hard
-gates (CI relies on all of them):
+under measure vs batched, plus a dense torn KV serving matrix timed in
+measure mode (the ``kv_cells_per_second`` trend metric), emitted to
+``BENCH_sweep.json`` (the batched section also standalone as
+``BENCH_batched.json``), with five hard gates (CI relies on all of
+them):
 
   * fork vs rerun — identical deterministic payload cell-for-cell;
   * measure vs fork — every field a measure-mode cell emits equals the
@@ -25,7 +27,9 @@ gates (CI relies on all of them):
     cell list;
   * batched vs measure — identical deterministic payload cell-for-cell
     on the torn matrix (and batched vs its own warm-up run —
-    determinism across jit compilation states).
+    determinism across jit compilation states);
+  * kv measure vs fork — every field the timed KV measure cells emit
+    equals the full-execution cell.
 """
 
 from __future__ import annotations
@@ -35,7 +39,7 @@ import time
 from typing import Dict, List
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan,
+from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan, TornSpec,
                              deterministic_cell_dict,
                              measure_divergence_fields, sweep)
 
@@ -94,6 +98,15 @@ SMOKE_TIMING_WORKLOADS = (
 )
 TIMING_STRATEGIES = ("adcc", "undo_log", "checkpoint_nvm")
 TIMING_PLANS = (CrashPlan.no_crash(), CrashPlan.at_every_step())
+
+# KV serving matrix for the throughput trend metric: a dense torn
+# at_every_step plan over the write-heavy profile, under the strategies
+# whose restore/recover/audit paths the fig_kv gates lean on. Sized so
+# the measure sweep takes ~seconds, not minutes.
+KV_TIMING_WORKLOAD = ("kv", {"profile": "udb", "n_steps": 24, "seed": 11})
+SMOKE_KV_TIMING_WORKLOAD = ("kv", {"profile": "udb", "n_steps": 12,
+                                   "seed": 11})
+KV_TIMING_STRATEGIES = ("none", "adcc", "shadow_snapshot")
 
 
 def default_workers() -> int:
@@ -266,6 +279,26 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
     # of the same matrix must agree cell-for-cell
     batched_div += full_divergences(torn_batched, batched_warm)
 
+    # -- KV serving matrix, timed in measure mode -------------------------
+    # The regression the speedup ratios above cannot see: a slip in the
+    # KV restore/recover/audit path (the per-crash-cell cost the serving
+    # figure pays thousands of times) changes no cell payload, so every
+    # divergence gate stays green while fig_kv quietly gets slower.
+    # Record the measure-mode cell throughput on a dense torn KV matrix
+    # as its own trend metric, and cross-check the cells against full
+    # execution so the timed sweep is never an unverified one.
+    kv_wl = SMOKE_KV_TIMING_WORKLOAD if smoke else KV_TIMING_WORKLOAD
+    kv_kw = dict(workloads=(kv_wl,), strategies=KV_TIMING_STRATEGIES,
+                 plans=(CrashPlan.no_crash(),
+                        CrashPlan.at_every_step(
+                            torn=TornSpec(fraction=0.5, seed=9,
+                                          samples=2))),
+                 cfg=cfg)
+    t0 = time.perf_counter()
+    kv_cells = sweep(mode="measure", **kv_kw)
+    kv_s = time.perf_counter() - t0
+    kv_div = measure_divergences(kv_cells, sweep(engine="fork", **kv_kw))
+
     return {
         "schema": "repro.scenarios.sweep_timing/v2",
         "smoke": bool(smoke),
@@ -282,6 +315,16 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         "measure_speedup": seconds["fork"] / max(seconds["measure"], 1e-12),
         "total_speedup": seconds["rerun"] / max(seconds["measure"], 1e-12),
         "batched_speedup": torn_measure_s / max(torn_batched_s, 1e-12),
+        "kv_cells_per_second": len(kv_cells) / max(kv_s, 1e-12),
+        "kv": {
+            "matrix": "kv dense (no_crash + torn at_every_step x 2 "
+                      "samples)",
+            "workload": list(kv_wl),
+            "strategies": list(KV_TIMING_STRATEGIES),
+            "cells": len(kv_cells),
+            "measure_seconds": kv_s,
+            "divergences": kv_div,
+        },
         "batched": {
             "matrix": "fig_torn dense (crash step x survival fraction "
                       "x seed sample)",
@@ -311,6 +354,7 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
     n_mdiv = len(payload["measure_divergences"])
     n_wdiv = len(payload["workers"]["divergences"])
     n_bdiv = len(payload["batched"]["divergences"])
+    n_kdiv = len(payload["kv"]["divergences"])
     rows = [
         Row("sweep/cells", payload["cells"],
             f"plans={'+'.join(payload['matrix']['plans'])}"),
@@ -333,6 +377,9 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             "jit-warm"),
         Row("sweep/batched_speedup", payload["batched_speedup"],
             "batched mode over measure mode (fig_torn dense matrix)"),
+        Row("sweep/kv_cells_per_second", payload["kv_cells_per_second"],
+            f"measure mode, {payload['kv']['cells']} cells "
+            "(kv dense torn matrix)"),
         Row("sweep/divergences", n_div,
             "fork vs rerun deterministic payload mismatches (must be 0)"),
         Row("sweep/measure_divergences", n_mdiv,
@@ -342,6 +389,8 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
         Row("sweep/batched_divergences", n_bdiv,
             "batched vs measure cell mismatches on the torn matrix "
             "(must be 0)"),
+        Row("sweep/kv_divergences", n_kdiv,
+            "kv measure-mode fields unequal to fork cells (must be 0)"),
     ]
     write_json(BENCH_SWEEP_JSON, payload)
     write_json(BENCH_BATCHED_JSON, {
@@ -371,6 +420,11 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             f"{n_bdiv} cells of the torn matrix: "
             f"{payload['batched']['divergences'][:3]} "
             f"(see {BENCH_BATCHED_JSON})")
+    if n_kdiv:
+        raise AssertionError(
+            f"kv measure-mode cells diverged from fork cells on "
+            f"{n_kdiv} cells: {payload['kv']['divergences'][:3]} "
+            f"(see {BENCH_SWEEP_JSON})")
     return rows
 
 

@@ -446,6 +446,14 @@ class CrashEmulator:
     def truth_flat(self, name: str) -> np.ndarray:
         return self._truth[name]
 
+    def truth_epoch(self, name: str) -> int:
+        """Current truth-side mutation epoch of ``name``. Monotonic;
+        equal epochs guarantee equal contents (the same copy-on-write
+        predicate :meth:`snapshot` uses), so incremental consumers —
+        the shadow-snapshot strategy's unchanged-region sharing — can
+        skip recopying a region whose epoch they already hold."""
+        return self._truth_epoch[name]
+
     # stats -------------------------------------------------------------------
     @property
     def stats(self) -> TrafficStats:

@@ -26,6 +26,13 @@ Module map:
               subset of the dirty cache lines persisted before power
               loss (the WITCHER/EasyCrash crash-state space), one cell
               per sample.
+  kv          KVWorkload — the beyond-paper persistent KV-serving
+              family: an NVM-backed store (A/B-versioned hash index +
+              append-only value-log extents) driven by seeded zipfian
+              get/put/delete streams (ETC/UDB profiles), with
+              algorithm-directed per-request persistence, durability /
+              atomicity auditing against the acknowledged prefix, and
+              the shadow_snapshot strategy as its natural baseline.
   costmodel   StepCostProfile + mechanism_step_seconds(): the single
               source for the paper's Figs. 4/8/13 modeled mechanism
               costs, and mechanism_cases() — the canonical 7-mechanism
@@ -73,6 +80,7 @@ from .costmodel import (
     mechanism_cases,
     mechanism_step_seconds,
     mm_step_profile,
+    kv_step_profile,
     xsbench_step_profile,
 )
 from .workloads import (
@@ -92,11 +100,13 @@ from .strategies import (
     CheckpointStrategy,
     ConsistencyStrategy,
     NativeStrategy,
+    ShadowSnapshotStrategy,
     UndoLogStrategy,
     make_strategy,
     register_strategy,
     strategy_names,
 )
+from .kv import KV_PROFILES, KVProfile, KVWorkload  # registers "kv"
 from .driver import (
     AVG_STEP_JITTER_FLOOR,
     DEFAULT_SWEEP_PLANS,
@@ -118,11 +128,13 @@ __all__ = [
     "CrashPlan", "CrashPoint", "TornSpec", "LineSurvival",
     "MECHANISM_CASES", "MechanismCase", "StepCostProfile",
     "mechanism_cases", "mechanism_step_seconds",
-    "cg_step_profile", "mm_step_profile", "xsbench_step_profile",
+    "cg_step_profile", "mm_step_profile", "kv_step_profile",
+    "xsbench_step_profile",
     "WORKLOADS", "Workload", "CGWorkload", "MMWorkload", "XSBenchWorkload",
+    "KVWorkload", "KVProfile", "KV_PROFILES",
     "RecoveryResult", "FinalReport", "make_workload", "register_workload",
     "STRATEGIES", "ConsistencyStrategy", "NativeStrategy", "AdccStrategy",
-    "UndoLogStrategy", "CheckpointStrategy",
+    "UndoLogStrategy", "CheckpointStrategy", "ShadowSnapshotStrategy",
     "make_strategy", "register_strategy", "strategy_names",
     "AVG_STEP_JITTER_FLOOR", "DEFAULT_SWEEP_PLANS", "SWEEP_ENGINES",
     "SWEEP_MODES", "WALL_CLOCK_FIELDS", "FULL_RUN_FIELDS",

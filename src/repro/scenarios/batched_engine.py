@@ -50,6 +50,7 @@ mode="batched")``.
 
 from __future__ import annotations
 
+import logging
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -74,6 +75,8 @@ from .workloads import (CGWorkload, MMWorkload, RecoveryResult, Workload,
                         XSBenchWorkload)
 
 __all__ = ["run_pair_batched"]
+
+_log = logging.getLogger(__name__)
 
 # CG invariant tolerances (ADCC_CG.recover) and the certainty-band
 # factor: a device error magnitude within [tol/_BAND, tol*_BAND] is
@@ -513,6 +516,11 @@ def _make_evaluator(wl: Workload, strat: ConsistencyStrategy):
     None to fall back to per-cell measure evaluation. Dispatch is on
     EXACT types: a subclass may override ``recover()``, and guessing
     wrong would silently break the batched==measure identity."""
+    if type(wl).audit_recovery is not Workload.audit_recovery:
+        # an auditing workload (e.g. KV) inspects the live recovered
+        # state; analytic evaluators never run recovery, so its info
+        # fields would diverge from measure cells
+        return None
     t = type(strat)
     if t in _SCRATCH_TYPES:
         return _ScratchEvaluator()
@@ -676,6 +684,10 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
 
     # -- split cells: analytic batch vs full/fallback ---------------------
     evaluator = _make_evaluator(wl, strat)
+    if evaluator is None:
+        _log.info("batched sweep: no analytic evaluator for (%s, %s); "
+                  "crashed cells fall back to per-cell measure",
+                  type(wl).__name__, type(strat).__name__)
     pending: List[_BatchedCell] = []
     emit: List[tuple] = []      # (kind, plan_desc, point, cell|None)
     for plan, points in grounded:

@@ -17,6 +17,12 @@ Cost formulas (per persist event; ``line`` = ``cfg.line_bytes``):
   undo_log            2 * (log_bytes / write_bw + log_lines * flush_latency)
                       (old-value copy + fence, then commit writeback + fence)
   adcc                adcc_bytes / write_bw + adcc_lines * flush_latency
+  shadow_snapshot     shadow_bytes / write_bw + shadow_lines * flush_latency
+                      + 8 / write_bw + flush_latency
+                      (copy-on-write copies only regions dirtied since the
+                      previous snapshot, then one persisted 8-byte
+                      root-pointer flip; shadow_bytes defaults to
+                      ckpt_bytes when a workload provides no COW estimate)
 """
 
 from __future__ import annotations
@@ -38,6 +44,7 @@ __all__ = [
     "cg_step_profile",
     "mm_step_profile",
     "xsbench_step_profile",
+    "kv_step_profile",
 ]
 
 
@@ -65,6 +72,11 @@ class StepCostProfile:
     log_lines: Optional[int] = None
     interval_steps: int = 1          # steps between persist events
     hdd_latency_s: float = 0.0       # per-checkpoint seek cost (tiny payloads)
+    # bytes a shadow snapshot copies per persist event (regions dirtied
+    # since the previous snapshot — the copy-on-write saving over
+    # ckpt_bytes). None => no estimate, fall back to ckpt_bytes.
+    shadow_bytes: Optional[int] = None
+    shadow_lines: Optional[int] = None
 
 
 def _lines(bytes_: int, explicit: Optional[int], line: int) -> int:
@@ -94,6 +106,13 @@ def mechanism_step_seconds(strategy: str, profile: StepCostProfile,
     if strategy == "adcc":
         nlines = _lines(profile.adcc_bytes, profile.adcc_lines, line)
         return profile.adcc_bytes / cfg.write_bw + nlines * cfg.flush_latency
+    if strategy == "shadow_snapshot":
+        nb = (profile.shadow_bytes if profile.shadow_bytes is not None
+              else profile.ckpt_bytes)
+        nl = _lines(nb, profile.shadow_lines, line)
+        # COW copy of the dirtied regions + one persisted root-pointer flip
+        return (nb / cfg.write_bw + nl * cfg.flush_latency
+                + 8 / cfg.write_bw + cfg.flush_latency)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
@@ -164,6 +183,27 @@ def mm_step_profile(n: int, line_bytes: int = 64) -> StepCostProfile:
     cs = 2 * (n + 1) * 8
     return StepCostProfile(ckpt_bytes=cf, log_bytes=cf, adcc_bytes=cs,
                            adcc_lines=max(1, cs // line_bytes))
+
+
+def kv_step_profile(index_bytes: int, meta_bytes: int, extent_bytes: int,
+                    n_extents: int, avg_value_bytes: int,
+                    line_bytes: int = 64) -> StepCostProfile:
+    """Per KV request: a checkpoint copies the whole store (index + meta
+    + every value extent); the undo log dirties the touched slot pair,
+    the appended value span, and the meta pair; ADCC-style selective
+    persistence flushes exactly the request's value span + slot line +
+    meta line; a shadow snapshot copies only the regions dirtied since
+    the previous snapshot — in steady state the index, the meta pair,
+    and the one extent the append head sits in (COW shares the rest)."""
+    footprint = index_bytes + meta_bytes + n_extents * extent_bytes
+    touched = 2 * line_bytes + avg_value_bytes + meta_bytes
+    adcc = avg_value_bytes + 2 * line_bytes
+    shadow = index_bytes + meta_bytes + extent_bytes
+    return StepCostProfile(
+        ckpt_bytes=footprint, log_bytes=touched, adcc_bytes=adcc,
+        adcc_lines=max(1, math.ceil(avg_value_bytes / line_bytes)) + 2,
+        shadow_bytes=shadow,
+        hdd_latency_s=5e-3)
 
 
 def xsbench_step_profile(line_bytes: int = 64, interval_steps: int = 1,

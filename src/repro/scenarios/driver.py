@@ -150,6 +150,21 @@ def classify_recovery(crashed: bool, crash_step: Optional[int],
                            tail re-executes — the XSBench Fig.-10
                            stale-counter shape)
 
+    Serving-style workloads (the KV store) generalize ``lost_updates``
+    through the ``Workload.audit_recovery`` hook, whose oracle-side
+    violation counts in ``rec.info`` map to two classes checked before
+    everything below — a recovered store that fails its clients is the
+    dominant fact about the cell, whatever the restart bookkeeping says
+    (WITCHER's crash-consistency bug taxonomy, applied to a request
+    log):
+
+      atomicity_violation  partially-applied state is reader-visible in
+                           the recovered store (a torn value or slot a
+                           non-validating reader would serve)
+      durability_violation an acknowledged update is missing or stale
+                           after recovery (the client was told the put
+                           committed; the recovered store disagrees)
+
     For sub-step torn crashes (``survival`` is the crash point's
     :class:`~repro.core.backends.LineSurvival`), two classes report
     *detection coverage* — whether the mechanism's integrity machinery
@@ -175,6 +190,10 @@ def classify_recovery(crashed: bool, crash_step: Optional[int],
         return "complete"
     if rec is None:
         return "unrecovered"
+    if int(rec.info.get("atomicity_violations") or 0) > 0:
+        return "atomicity_violation"
+    if int(rec.info.get("durability_violations") or 0) > 0:
+        return "durability_violation"
     torn_sub = survival is not None
     if torn_sub and rec.info.get("state_corrupt"):
         return "torn_corrupt"
@@ -349,6 +368,10 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         emu.crash(point.survival)
         if recover:
             rec = strat.recover(crash_step, torn, point.survival)
+            # oracle-side audit of the recovered state (durability /
+            # atomicity violation counts) BEFORE the tail replay papers
+            # over what recovery actually produced
+            wl.audit_recovery(rec, crash_step, torn)
             restart, resume = rec.restart_point, rec.resume_step
             detect_s = rec.detect_seconds
             lost, redo = _recovery_bookkeeping(rec, crash_step)
@@ -365,6 +388,11 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
                                               emu.cfg, steps_run)
     stats = emu.stats
 
+    # a recovery the audit caught violating durability/atomicity is not
+    # a correct run even when the deterministic tail replay re-derives a
+    # clean end state — the clients already observed the violation
+    violations = (int(rec_info.get("durability_violations") or 0)
+                  + int(rec_info.get("atomicity_violations") or 0))
     info = dict(report.info)
     info.update(rec_info)
     return ScenarioResult(
@@ -381,7 +409,7 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         overhead_seconds=overhead,
         modeled_total_seconds=emu.modeled_seconds(),
         wall_seconds=time.perf_counter() - t0,
-        correct=report.correct,
+        correct=report.correct and violations == 0,
         correctness_class=classify_recovery(crashed, crash_step, rec,
                                             point.survival),
         state_certified=None,
@@ -427,6 +455,10 @@ def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     emu.crash(point.survival)
     torn_persisted = emu.stats.torn_bytes_persisted - torn_before
     rec = strat.recover(crash_step, torn, point.survival)
+    # audit BEFORE certify: the certification closure may restore the
+    # workload to the golden state, and the audit must see what recovery
+    # actually produced
+    wl.audit_recovery(rec, crash_step, torn)
     lost, redo = _recovery_bookkeeping(rec, crash_step)
     overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
                                               emu.cfg, crash_step + 1)

@@ -15,6 +15,10 @@ mechanism space:
   checkpoint_nvm       ... to NVM (copy + cache flush)
   checkpoint_nvm_dram  ... on the heterogeneous NVM/DRAM system
                        (wrap :class:`repro.core.checkpoint_baseline.CheckpointBaseline`)
+  shadow_snapshot      copy-on-write shadow copy of the critical regions
+                       + atomic root-pointer flip; recovery discards the
+                       unflipped shadow (the kv-engine atomic-replace
+                       design — beyond-paper, motivated by KV serving)
 
 Per-interval variants are spelled ``"<name>@<k>"`` ("checkpoint_nvm@5"
 checkpoints every 5 steps). Every strategy also exposes the *modeled*
@@ -38,6 +42,7 @@ __all__ = [
     "AdccStrategy",
     "UndoLogStrategy",
     "CheckpointStrategy",
+    "ShadowSnapshotStrategy",
     "STRATEGIES",
     "register_strategy",
     "make_strategy",
@@ -273,6 +278,97 @@ class CheckpointNvmDramStrategy(CheckpointStrategy):
     target = "nvm_dram"
 
 
+class ShadowSnapshotStrategy(ConsistencyStrategy):
+    """Copy-on-write shadow snapshot + atomic root-pointer flip every
+    ``interval`` steps (the kv-engine atomic-replace design).
+
+    Two snapshot slots alternate: a persist event copies the critical
+    regions into the *staging* slot — sharing (not recopying) any region
+    whose truth epoch is unchanged since the active snapshot, which is
+    what makes this cheaper than a full checkpoint on workloads with
+    cold regions (a KV store's untouched value extents) — then flips the
+    root pointer to the staging slot with one persisted 8-byte write.
+    A crash mid-copy loses nothing: the root still points at the old
+    slot, and recovery simply discards the unflipped shadow."""
+
+    key = "shadow_snapshot"
+
+    def __init__(self, interval: int = 1):
+        super().__init__(interval)
+        self._slots: List[Optional[Dict[str, object]]] = [None, None]
+        self._active: int = -1       # root pointer; -1 = never flipped
+
+    def attach(self, workload):
+        super().attach(workload)
+        # per-run state: a reused instance must not recover from a
+        # previous run's snapshot
+        self._slots = [None, None]
+        self._active = -1
+
+    def after_step(self, i):
+        if (i + 1) % self.interval:
+            return
+        emu = self.wl.emu
+        cfg, stats = emu.cfg, emu.stats
+        prev = self._slots[self._active] if self._active >= 0 else None
+        arrays: Dict[str, object] = {}
+        epochs: Dict[str, int] = {}
+        for r in self.wl.live_regions():
+            e = emu.truth_epoch(r.name)
+            if prev is not None and prev["epochs"].get(r.name) == e:
+                # unchanged since the active snapshot: share its copy
+                arrays[r.name] = prev["arrays"][r.name]
+            else:
+                data = r.view.copy()
+                # copy into the shadow area = source cache flush + NVM
+                # write (the checkpoint_nvm charging model)
+                self.wl.emu.flush(r.name)
+                stats.charge_write(data.nbytes, cfg)
+                arrays[r.name] = data
+            epochs[r.name] = e
+        staging = 1 - self._active if self._active >= 0 else 0
+        self._slots[staging] = {"arrays": arrays,
+                                "scalars": dict(self.wl.scalar_state()),
+                                "step": i, "epochs": epochs}
+        # the atomic commit: one persisted root-pointer write
+        stats.charge_write(8, cfg)
+        stats.charge_flush_issue(1, cfg)
+        self._active = staging
+
+    def recover(self, crash_step, torn, survival=None):
+        # any half-written staging slot is simply discarded: the root
+        # pointer only ever references a fully-persisted snapshot
+        discarded = (self._slots[1 - self._active] is not None
+                     if self._active >= 0 else self._slots[0] is not None)
+        info = {"shadow_discarded": discarded}
+        if self._active < 0:
+            self.wl.reset()
+            return RecoveryResult(resume_step=0, restart_point=-1,
+                                  redo_steps=crash_step + 1,
+                                  steps_lost=crash_step + 1,
+                                  from_scratch=True, info=info)
+        slot = self._slots[self._active]
+        cfg, stats = self.wl.emu.cfg, self.wl.emu.stats
+        for data in slot["arrays"].values():
+            stats.charge_read(data.nbytes, cfg)
+        self.wl.restore(dict(slot["arrays"]), dict(slot["scalars"]),
+                        slot["step"])
+        resume = slot["step"] + 1
+        return RecoveryResult(
+            resume_step=resume, restart_point=slot["step"],
+            redo_steps=crash_step + 1 - resume,
+            steps_lost=crash_step - slot["step"], info=info)
+
+    def snapshot(self):
+        # slots are replaced wholesale (never mutated in place), so a
+        # shallow copy of the slot list is a true capture
+        return {"slots": list(self._slots), "active": self._active}
+
+    def restore_snapshot(self, snap):
+        self._slots = list(snap["slots"])
+        self._active = snap["active"]
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
@@ -284,11 +380,24 @@ STRATEGIES: Dict[str, Callable[..., ConsistencyStrategy]] = {
     "checkpoint_hdd": CheckpointHddStrategy,
     "checkpoint_nvm": CheckpointStrategy,
     "checkpoint_nvm_dram": CheckpointNvmDramStrategy,
+    "shadow_snapshot": ShadowSnapshotStrategy,
 }
 
 
 def register_strategy(name: str,
-                      factory: Callable[..., ConsistencyStrategy]) -> None:
+                      factory: Callable[..., ConsistencyStrategy], *,
+                      override: bool = False) -> None:
+    """Register a strategy factory under ``name``.
+
+    Re-registering an existing name raises (a silent overwrite would
+    make every subsequent sweep spec mean something else) unless the
+    factory is identical (idempotent re-import) or ``override=True``.
+    """
+    if not override and name in STRATEGIES and STRATEGIES[name] is not factory:
+        raise ValueError(
+            f"strategy {name!r} already registered "
+            f"(registered: {strategy_names()}); pass override=True "
+            f"to replace it")
     STRATEGIES[name] = factory
 
 

@@ -185,6 +185,27 @@ class Workload(abc.ABC):
         if scalars:
             self.restore_scalars(dict(scalars))
 
+    # -- recovery audit ----------------------------------------------------------
+    def audit_recovery(self, rec: "RecoveryResult", crash_step: int,
+                       torn: bool) -> None:
+        """Oracle-side audit of the just-recovered state, called by the
+        driver immediately after ``strategy.recover(...)`` (before any
+        tail replay or certification). Serving-style workloads override
+        this to check the recovered store against the acknowledged
+        request prefix and record violation counts in ``rec.info``
+        (``durability_violations`` — an acknowledged update is missing
+        or stale; ``atomicity_violations`` — partially-applied state is
+        reader-visible), which ``classify_recovery`` maps to the
+        ``durability_violation`` / ``atomicity_violation`` classes.
+
+        Must be deterministic in the recovered state and side-effect
+        free on regions/traffic (read via uncharged ``.view``s): its
+        ``rec.info`` entries are part of the engine-invariance contract.
+        The default is a no-op; workloads that override it are excluded
+        from the batched engine's analytic evaluators (which synthesize
+        RecoveryResults without running live recovery) and take the
+        per-cell measure fallback instead."""
+
     # -- ADCC hooks -------------------------------------------------------------
     def adcc_before_step(self, i: int) -> None:
         pass
@@ -693,7 +714,19 @@ WORKLOADS: Dict[str, Callable[..., Workload]] = {
 }
 
 
-def register_workload(name: str, factory: Callable[..., Workload]) -> None:
+def register_workload(name: str, factory: Callable[..., Workload], *,
+                      override: bool = False) -> None:
+    """Register a workload factory under ``name``.
+
+    Re-registering an existing name raises (a silent overwrite would
+    make every subsequent sweep spec mean something else) unless the
+    factory is identical (idempotent re-import) or ``override=True``.
+    """
+    if not override and name in WORKLOADS and WORKLOADS[name] is not factory:
+        raise ValueError(
+            f"workload {name!r} already registered "
+            f"(registered: {sorted(WORKLOADS)}); pass override=True "
+            f"to replace it")
     WORKLOADS[name] = factory
 
 

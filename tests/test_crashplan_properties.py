@@ -217,3 +217,50 @@ def test_ungroundable_plans_raise_not_clamp():
         CrashPlan.random(count=5, seed=0).resolve(wl)
     with pytest.raises(ValueError):
         CrashPlan.at_phase("loop2", 0).resolve(wl)
+
+
+# ---------------------------------------------------------------------------
+# KV serving-class properties (durability/atomicity audit contract)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), t_seed=st.integers(0, 2**8),
+       profile=st.sampled_from(["etc", "udb"]))
+@settings(max_examples=8, deadline=None)
+def test_kv_class_coherence(seed, t_seed, profile):
+    """A ``durability_violation`` cell is never correct, and ``no_crash``
+    KV cells are always ``complete`` — for any stream seed, survival
+    seed, and profile."""
+    plan = CrashPlan.random(count=2, seed=seed % 97,
+                            torn=TornSpec(fraction=0.5, seed=t_seed))
+    cells = sweep(workloads=(("kv", {"n_steps": 14, "seed": seed,
+                                     "profile": profile}),),
+                  strategies=("none", "shadow_snapshot",
+                              "checkpoint_nvm@5"),
+                  plans=(CrashPlan.no_crash(), plan), cfg=SMALL)
+    for c in cells:
+        if c.correctness_class == "durability_violation":
+            assert c.correct is False, (c.strategy, c.crash_step)
+        if c.crash_step is None:
+            assert c.correctness_class == "complete"
+            assert c.correct, (c.strategy,)
+
+
+@pytest.mark.parametrize("backend", ["reference", "vectorized"])
+def test_kv_engine_invariance_both_backends(backend):
+    """fork == rerun == measure (where fields overlap), cell for cell,
+    for the KV workload on both emulator backends."""
+    cfg = NVMConfig(backend=backend, cache_bytes=256 * 1024)
+    kw = dict(workloads=(("kv", {"n_steps": 12, "profile": "udb"}),),
+              strategies=("none", "adcc", "shadow_snapshot"),
+              plans=(CrashPlan.no_crash(),
+                     CrashPlan.at_every_step(
+                         torn=TornSpec(fraction=0.5, seed=3))),
+              cfg=cfg)
+    fork = sweep(engine="fork", **kw)
+    rerun = sweep(engine="rerun", **kw)
+    measure = sweep(engine="fork", mode="measure", **kw)
+    assert [deterministic_cell_dict(c) for c in fork] == \
+        [deterministic_cell_dict(c) for c in rerun]
+    assert len(measure) == len(fork)
+    for m, f in zip(measure, fork):
+        assert measure_divergence_fields(m, f) == []

@@ -1,0 +1,362 @@
+"""Tests for the persistent KV-serving workload family.
+
+Covers: store semantics (zipfian stream determinism, index/value-log
+integrity, oracle-checked finalize), the shadow_snapshot strategy
+(copy-on-write extent sharing, root flip, scratch recovery before the
+first flip), the durability/atomicity correctness classes across
+strategies and recovery policies, the commit-record coherence of the
+validating mount recovery, the batched-engine fallback for auditing
+workloads, and the registry collision guards.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backends import LineSurvival
+from repro.core.nvm import NVMConfig
+from repro.scenarios import (
+    KV_PROFILES,
+    CrashPlan,
+    KVWorkload,
+    ShadowSnapshotStrategy,
+    TornSpec,
+    deterministic_cell_dict,
+    make_strategy,
+    measure_divergence_fields,
+    register_strategy,
+    register_workload,
+    run_scenario,
+    strategy_names,
+    sweep,
+)
+from repro.scenarios.strategies import STRATEGIES
+from repro.scenarios.workloads import WORKLOADS, Workload
+
+KV = ("kv", {"n_steps": 18})
+KV_UDB = ("kv", {"n_steps": 18, "profile": "udb"})
+STRATS = ("none", "adcc", "undo_log", "checkpoint_nvm@4", "shadow_snapshot")
+TORN_EVERY = CrashPlan.at_every_step(torn=TornSpec(fraction=0.5, seed=5,
+                                                   samples=2))
+
+
+def _run_pair(wl, strat, upto):
+    """Drive (workload, strategy) through steps [0, upto)."""
+    for i in range(upto):
+        strat.before_step(i)
+        wl.step(i)
+        strat.after_step(i)
+
+
+# ---------------------------------------------------------------------------
+# store semantics
+# ---------------------------------------------------------------------------
+
+class TestKVStore:
+    def test_request_stream_deterministic_and_profiled(self):
+        wl = KVWorkload(profile="udb", n_steps=200, n_keys=32)
+        reqs = [wl._request(i) for i in range(200)]
+        assert reqs == [wl._request(i) for i in range(200)]
+        ops = [op for op, _, _ in reqs]
+        p = KV_PROFILES["udb"]
+        # write-heavy profile: puts materially present, gets dominate puts'
+        # complement; exact fractions are seeded so just sanity-band them
+        assert 0.4 < ops.count("get") / len(ops) < 0.8
+        assert 0.2 < ops.count("put") / len(ops) < 0.6
+        sizes = {nw for op, _, nw in reqs if op == "put"}
+        assert sizes <= {w for w, _ in p.value_words}
+        keys = [k for _, k, _ in reqs]
+        assert all(0 <= k < 32 for k in keys)
+        # zipfian skew: the hottest key is hit far more than the median
+        counts = np.bincount(keys, minlength=32)
+        assert counts.max() > 3 * np.median(counts[counts > 0])
+
+    def test_no_crash_run_is_correct_and_oracle_checked(self):
+        wl = KVWorkload(n_steps=24)
+        wl.setup(NVMConfig(), "plain")
+        _run_pair(wl, make_strategy("none"), 24)
+        rep = wl.finalize()
+        assert rep.correct
+        assert rep.metrics["requests"] == 24.0
+        maps, counters = wl._oracle()
+        assert rep.metrics["live_keys"] == float(len(maps[24]))
+        # corrupting one live value is caught by the finalize oracle
+        sem = wl._semantic_map()
+        key, ent = sorted(sem.items())[0]
+        e, off = divmod(ent["goff"], wl.extent_words)
+        wl._rvlog[e][off] = int(wl._rvlog[e].view[off]) ^ 1
+        assert not wl.finalize().correct
+
+    def test_versioned_slot_rows_preserve_previous_value(self):
+        wl = KVWorkload(n_steps=18, profile="udb")
+        wl.setup(NVMConfig(), "plain")
+        strat = make_strategy("none")
+        overwrites = 0
+        seen = {}
+        for i in range(18):
+            op, key, _ = wl._request(i)
+            before = seen.get(key)
+            strat.before_step(i)
+            wl.step(i)
+            strat.after_step(i)
+            if op != "put":
+                continue
+            seen[key] = i + 1
+            if before is None:
+                continue
+            overwrites += 1
+            _s, rows, found = wl._slot_lookup(key)
+            assert found
+            # the superseded version row survives in the slot pair, intact
+            seqs = sorted(int(rows[v, 1]) for v in (0, 1))
+            assert seqs == sorted([before, i + 1])
+            assert all(wl._row_ok(rows[v]) for v in (0, 1))
+        assert overwrites, "stream never overwrote a key; enlarge n_steps"
+
+    def test_value_log_never_spans_extents(self):
+        wl = KVWorkload(n_steps=40, profile="udb", extent_words=32)
+        wl.setup(NVMConfig(), "plain")
+        _run_pair(wl, make_strategy("none"), 40)
+        for key, ent in wl._semantic_map().items():
+            e, off = divmod(ent["goff"], wl.extent_words)
+            assert off + ent["nw"] <= wl.extent_words
+
+    def test_capacity_exhaustion_raises(self):
+        wl = KVWorkload(n_steps=40, profile="udb", extent_words=32,
+                        n_extents=1)
+        wl.setup(NVMConfig(), "plain")
+        with pytest.raises(RuntimeError, match="exhausted"):
+            _run_pair(wl, make_strategy("none"), 40)
+
+    def test_constructor_validation(self):
+        with pytest.raises(KeyError, match="unknown KV profile"):
+            KVWorkload(profile="nope")
+        with pytest.raises(ValueError, match="policy"):
+            KVWorkload(policy="hope")
+        with pytest.raises(ValueError, match="n_slots"):
+            KVWorkload(n_keys=8, n_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# shadow_snapshot strategy
+# ---------------------------------------------------------------------------
+
+class TestShadowSnapshot:
+    def test_registered(self):
+        assert "shadow_snapshot" in strategy_names()
+        assert isinstance(make_strategy("shadow_snapshot@3"),
+                          ShadowSnapshotStrategy)
+
+    def test_scratch_before_first_flip(self):
+        # interval 50 > n_steps: the root pointer never flips, so
+        # recovery discards the staged shadow and restarts from scratch —
+        # losing the acked prefix (KV makes that a durability class)
+        r = run_scenario(KV_UDB, "shadow_snapshot@50", CrashPlan.at_step(11))
+        assert r.restart_point == -1
+        assert r.correctness_class == "durability_violation"
+
+    def test_root_flip_alternates_and_cow_shares_cold_extents(self):
+        wl = KVWorkload(n_steps=18, profile="udb")
+        wl.setup(NVMConfig(), "plain")
+        strat = make_strategy("shadow_snapshot")
+        strat.attach(wl)
+        actives = []
+        shared = 0
+        for i in range(18):
+            strat.before_step(i)
+            wl.step(i)
+            strat.after_step(i)
+            actives.append(strat._active)
+            slots = strat._slots
+            if i >= 1:
+                prev = slots[1 - strat._active]
+                cur = slots[strat._active]
+                shared += sum(cur["arrays"][n] is prev["arrays"][n]
+                              for n in cur["arrays"])
+        assert actives[:4] == [0, 1, 0, 1]
+        # with per-extent regions most extents are cold between snapshots
+        assert shared > 0
+
+    def test_recovery_discards_unflipped_shadow(self):
+        cells = sweep(workloads=(KV_UDB,), strategies=("shadow_snapshot",),
+                      plans=(CrashPlan.at_step(11, torn=True),))
+        (r,) = cells
+        # torn crash mid-step: the staged snapshot of step 11 was never
+        # flipped; recovery resumes from the step-10 root
+        assert r.restart_point == 10
+        assert r.correctness_class in ("consistent_rollback",
+                                       "torn_detected")
+        assert r.correct
+
+    def test_modeled_overhead_positive_and_below_full_checkpoint(self):
+        none = run_scenario(KV_UDB, "none", CrashPlan.no_crash())
+        shad = run_scenario(KV_UDB, "shadow_snapshot", CrashPlan.no_crash())
+        ckpt = run_scenario(KV_UDB, "checkpoint_nvm", CrashPlan.no_crash())
+        assert shad.modeled_total_seconds > none.modeled_total_seconds
+        # COW sharing: per-step shadow traffic < full-footprint checkpoint
+        assert (shad.traffic["nvm_bytes_written"]
+                < ckpt.traffic["nvm_bytes_written"])
+
+
+# ---------------------------------------------------------------------------
+# durability / atomicity correctness classes
+# ---------------------------------------------------------------------------
+
+class TestDurabilityClasses:
+    def test_scratch_restart_loses_acked_updates(self):
+        r = run_scenario(KV_UDB, "none", CrashPlan.at_step(11))
+        assert r.correctness_class == "durability_violation"
+        assert r.correct is False
+
+    def test_protected_strategies_show_zero_violations(self):
+        for s in ("undo_log", "checkpoint_nvm", "shadow_snapshot", "adcc"):
+            r = run_scenario(KV_UDB, s, CrashPlan.at_step(11))
+            assert r.correctness_class not in ("durability_violation",
+                                               "atomicity_violation"), s
+            assert r.correct, s
+
+    def test_checkpoint_interval_opens_durability_window(self):
+        # ack-on-apply + periodic checkpoint: acked requests since the
+        # last checkpoint are lost on crash
+        r = run_scenario(KV_UDB, "checkpoint_nvm@6", CrashPlan.at_step(15))
+        assert r.restart_point == 11
+        assert r.correctness_class == "durability_violation"
+
+    def test_blind_mount_shows_atomicity_violations_validate_never(self):
+        blind_kv = ("kv", {"n_steps": 18, "profile": "udb",
+                           "policy": "blind"})
+        blind_hits = 0
+        for step in (0, 7, 10, 16):      # put steps of the udb stream
+            for seed in range(4):
+                torn = TornSpec(fraction=0.5, seed=seed)
+                b = run_scenario(blind_kv, "adcc",
+                                 CrashPlan.at_step(step, torn=torn))
+                v = run_scenario(KV_UDB, "adcc",
+                                 CrashPlan.at_step(step, torn=torn))
+                blind_hits += b.correctness_class == "atomicity_violation"
+                assert v.correctness_class != "atomicity_violation"
+                assert v.info["durability_violations"] == 0
+        assert blind_hits > 0
+
+    def test_validate_commit_record_rejects_rootless_writes(self):
+        # torn crash where the meta root survives but the request's index
+        # row dies: a validating mount must fall back to the previous
+        # root instead of adopting a root whose write-set is gone
+        wl = KVWorkload(n_steps=18)
+        strat = make_strategy("adcc")
+        wl.setup(None, "adcc")
+        strat.attach(wl)
+        _run_pair(wl, strat, 15)
+        strat.before_step(15)
+        wl.step(15)                      # a put; crash before its flush
+        assert any(n == "kv.index" for n, _, _ in wl._touched)
+        wl.emu.crash(LineSurvival(fraction=0.5, seed=5))
+        rec = strat.recover(15, True, None)
+        wl.audit_recovery(rec, 15, True)
+        assert rec.info["atomicity_violations"] == 0
+        assert rec.info["durability_violations"] == 0
+        if rec.resume_step == 16:
+            # root adopted => the whole write-set must have survived
+            sem = wl._semantic_map()
+            _, key, _ = wl._request(15)
+            assert sem[key]["seq"] == 16 and sem[key]["ok"]
+
+    def test_audit_acked_prefix_depends_on_torn(self):
+        wl = KVWorkload(n_steps=12)
+        wl.setup(None, "plain")
+        strat = make_strategy("none")
+        strat.attach(wl)
+        _run_pair(wl, strat, 8)
+        wl.emu.crash(None)
+        rec = strat.recover(7, False, None)
+        wl.audit_recovery(rec, 7, False)
+        assert rec.info["acked_requests"] == 8     # boundary: step 7 acked
+        maps, _ = wl._oracle()
+        assert rec.info["durability_violations"] == len(maps[8])
+
+
+# ---------------------------------------------------------------------------
+# engine paths
+# ---------------------------------------------------------------------------
+
+class TestKVEngines:
+    def test_batched_mode_falls_back_and_matches_measure(self, caplog):
+        import logging
+        kw = dict(workloads=(KV,), strategies=("shadow_snapshot", "none"),
+                  plans=(CrashPlan.no_crash(), TORN_EVERY))
+        meas = sweep(mode="measure", **kw)
+        with caplog.at_level(logging.INFO,
+                             logger="repro.scenarios.batched_engine"):
+            bat = sweep(mode="batched", **kw)
+        assert "no analytic evaluator" in caplog.text
+        assert "fall back to per-cell measure" in caplog.text
+        assert len(bat) == len(meas)
+        for b, m in zip(bat, meas):
+            assert deterministic_cell_dict(b) == deterministic_cell_dict(m)
+
+    def test_certification_validate_clean_blind_dirty(self):
+        kw = dict(plans=(TORN_EVERY,), mode="measure")
+        vcells = sweep(workloads=(KV,), strategies=("adcc",), **kw)
+        assert all(c.state_certified is not False for c in vcells)
+        bcells = sweep(workloads=(("kv", {"n_steps": 18,
+                                          "policy": "blind"}),),
+                       strategies=("adcc",), **kw)
+        assert any(c.state_certified is False for c in bcells)
+
+    def test_shadow_and_checkpoint_cells_always_certify(self):
+        cells = sweep(workloads=(KV_UDB,),
+                      strategies=("shadow_snapshot", "checkpoint_nvm@4",
+                                  "undo_log"),
+                      plans=(TORN_EVERY,), mode="measure")
+        assert all(c.state_certified is not False for c in cells)
+
+
+# ---------------------------------------------------------------------------
+# registry collision guards
+# ---------------------------------------------------------------------------
+
+class TestRegistryGuards:
+    def test_workload_collision_raises_with_names(self):
+        with pytest.raises(ValueError) as e:
+            register_workload("kv", lambda **kw: KVWorkload(**kw))
+        assert "already registered" in str(e.value)
+        assert "'kv'" in str(e.value) and "'cg'" in str(e.value)
+        assert "override=True" in str(e.value)
+        assert WORKLOADS["kv"] is KVWorkload
+
+    def test_workload_override_and_idempotent_reregister(self):
+        # same factory re-registration is a no-op, not a collision
+        register_workload("kv", KVWorkload)
+        sentinel = lambda **kw: KVWorkload(**kw)   # noqa: E731
+        register_workload("kv", sentinel, override=True)
+        try:
+            assert WORKLOADS["kv"] is sentinel
+        finally:
+            register_workload("kv", KVWorkload, override=True)
+
+    def test_strategy_collision_raises_with_names(self):
+        with pytest.raises(ValueError) as e:
+            register_strategy("shadow_snapshot",
+                              lambda interval=1:
+                              ShadowSnapshotStrategy(interval))
+        msg = str(e.value)
+        assert "already registered" in msg and "override=True" in msg
+        assert "shadow_snapshot" in msg and "undo_log" in msg
+        assert STRATEGIES["shadow_snapshot"] is ShadowSnapshotStrategy
+
+    def test_strategy_override_allows_replacement(self):
+        class Custom(ShadowSnapshotStrategy):
+            pass
+
+        register_strategy("shadow_snapshot", Custom, override=True)
+        try:
+            assert STRATEGIES["shadow_snapshot"] is Custom
+        finally:
+            register_strategy("shadow_snapshot", ShadowSnapshotStrategy,
+                              override=True)
+
+    def test_audit_hook_default_is_noop(self):
+        # the batched-engine gate keys on the hook being overridden
+        assert type(KVWorkload(n_steps=4)).audit_recovery \
+            is not Workload.audit_recovery
+        from repro.scenarios.workloads import CGWorkload
+        assert CGWorkload.audit_recovery is Workload.audit_recovery
