@@ -13,6 +13,7 @@ writes every suite's rows as one machine-readable artifact.
   fig10_12  MC correctness basic vs selective restart (paper Figs. 10+12)
   fig13     MC runtime, 7 mechanisms                  (paper Fig. 13)
   fig_torn  torn-write detection coverage vs survival (BENCH_torn.json)
+  fig_faults nested-crash + media-fault campaigns     (BENCH_faults.json)
   fig_kv    KV serving durability vs overhead matrix  (BENCH_kv.json)
   scenarios workload x strategy x crash-point sweep   (BENCH_scenarios.json)
   sweep     rerun/fork/measure sweep timing + gates   (BENCH_sweep.json)
@@ -23,8 +24,10 @@ Suites construct their NVMConfigs lazily (inside ``run()``), so
 ``--backend`` / ``REPRO_NVM_BACKEND`` can never be snapshotted at import
 time and silently ignored. ``--smoke`` / ``--workers`` export
 ``REPRO_SCENARIOS_SMOKE`` / ``REPRO_SWEEP_WORKERS`` the same way, for
-the suites that sweep scenario matrices (fig3, fig7, fig_torn, fig_kv,
-scenarios, sweep).
+the suites that sweep scenario matrices (fig3, fig7, fig_torn,
+fig_faults, fig_kv, scenarios, sweep). ``fig_faults --chaos`` (direct
+invocation) additionally gates the self-healing pool against injected
+worker kills and hangs.
 
 Roofline (reads dry-run artifacts): ``python -m benchmarks.roofline``.
 """
@@ -38,7 +41,7 @@ import time
 
 from . import (fig3_cg_recompute, fig4_cg_runtime, fig7_mm_recompute,
                fig8_mm_runtime, fig10_12_mc_correctness, fig13_mc_runtime,
-               fig_kv, fig_torn, kernel_bench, scenarios_sweep,
+               fig_faults, fig_kv, fig_torn, kernel_bench, scenarios_sweep,
                sweep_timing, train_overhead)
 from .common import emit, rows_to_records, write_json
 
@@ -50,6 +53,7 @@ SUITES = {
     "fig10_12": fig10_12_mc_correctness,
     "fig13": fig13_mc_runtime,
     "fig_torn": fig_torn,
+    "fig_faults": fig_faults,
     "fig_kv": fig_kv,
     "scenarios": scenarios_sweep,
     "sweep": sweep_timing,

@@ -15,9 +15,11 @@ suite in benchmarks/run.py and benchmarks/sweep_timing.py): a dense
 one-crash-point-per-step matrix timed under rerun, fork, and
 fork+measure execution, plus the fig_torn dense torn matrix timed
 under measure vs batched, plus a dense torn KV serving matrix timed in
-measure mode (the ``kv_cells_per_second`` trend metric), emitted to
-``BENCH_sweep.json`` (the batched section also standalone as
-``BENCH_batched.json``), with five hard gates (CI relies on all of
+measure mode (the ``kv_cells_per_second`` trend metric), plus a dense
+fault-injection matrix — nested re-crash and poisoned-line plans —
+timed in measure mode (the ``fault_cells_per_second`` trend metric),
+emitted to ``BENCH_sweep.json`` (the batched section also standalone
+as ``BENCH_batched.json``), with six hard gates (CI relies on all of
 them):
 
   * fork vs rerun — identical deterministic payload cell-for-cell;
@@ -29,7 +31,9 @@ them):
     on the torn matrix (and batched vs its own warm-up run —
     determinism across jit compilation states);
   * kv measure vs fork — every field the timed KV measure cells emit
-    equals the full-execution cell.
+    equals the full-execution cell;
+  * fault measure vs fork — every field the timed fault-injection
+    measure cells emit equals the full-execution cell.
 """
 
 from __future__ import annotations
@@ -39,8 +43,8 @@ import time
 from typing import Dict, List
 
 from repro.core.nvm import NVMConfig
-from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan, TornSpec,
-                             deterministic_cell_dict,
+from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan, FaultSpec,
+                             TornSpec, deterministic_cell_dict,
                              measure_divergence_fields, sweep)
 
 from .common import ART, Row, emit, write_json
@@ -107,6 +111,19 @@ KV_TIMING_WORKLOAD = ("kv", {"profile": "udb", "n_steps": 24, "seed": 11})
 SMOKE_KV_TIMING_WORKLOAD = ("kv", {"profile": "udb", "n_steps": 12,
                                    "seed": 11})
 KV_TIMING_STRATEGIES = ("none", "adcc", "shadow_snapshot")
+
+# fault-injection matrix for the resilience-throughput trend metric: a
+# dense at_every_step plan per fault axis (one nested re-crash, one
+# poisoned-line) over the two wholesale mechanisms whose recovery the
+# fig_faults gates pin as idempotent. Every fault cell pays the full
+# harness price — golden pass + restore + inject + retried recovery —
+# so this is the metric that notices when that harness gets slower.
+FAULT_TIMING_STRATEGIES = ("undo_log", "checkpoint_nvm")
+FAULT_TIMING_PLANS = (
+    CrashPlan.at_every_step(fault=FaultSpec(nested_after=2,
+                                            nested_fraction=0.5, seed=13)),
+    CrashPlan.at_every_step(fault=FaultSpec(poison_words=2, seed=14)),
+)
 
 
 def default_workers() -> int:
@@ -299,8 +316,24 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
     kv_s = time.perf_counter() - t0
     kv_div = measure_divergences(kv_cells, sweep(engine="fork", **kv_kw))
 
+    # -- fault-injection matrix, timed in measure mode --------------------
+    # Fault cells bypass every fast path (batched evaluation, shared
+    # golden state): each pays snapshot + golden recovery + restore +
+    # fault injection + retried recovery. None of the ratios above time
+    # that harness, so record its cell throughput as its own trend
+    # metric — and cross-check against full execution so the timed
+    # sweep is gated like every other one.
+    fkw = dict(workloads=(workloads[0], workloads[2]),
+               strategies=FAULT_TIMING_STRATEGIES,
+               plans=FAULT_TIMING_PLANS, cfg=cfg)
+    t0 = time.perf_counter()
+    fault_cells = sweep(mode="measure", **fkw)
+    fault_s = time.perf_counter() - t0
+    fault_div = measure_divergences(fault_cells,
+                                    sweep(engine="fork", **fkw))
+
     return {
-        "schema": "repro.scenarios.sweep_timing/v2",
+        "schema": "repro.scenarios.sweep_timing/v3",
         "smoke": bool(smoke),
         "matrix": {
             "workloads": [[w, p] for w, p in workloads],
@@ -316,6 +349,15 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         "total_speedup": seconds["rerun"] / max(seconds["measure"], 1e-12),
         "batched_speedup": torn_measure_s / max(torn_batched_s, 1e-12),
         "kv_cells_per_second": len(kv_cells) / max(kv_s, 1e-12),
+        "fault_cells_per_second": len(fault_cells) / max(fault_s, 1e-12),
+        "fault": {
+            "matrix": "cg+xsbench dense (nested at_every_step + poison "
+                      "at_every_step)",
+            "strategies": list(FAULT_TIMING_STRATEGIES),
+            "cells": len(fault_cells),
+            "measure_seconds": fault_s,
+            "divergences": fault_div,
+        },
         "kv": {
             "matrix": "kv dense (no_crash + torn at_every_step x 2 "
                       "samples)",
@@ -355,6 +397,7 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
     n_wdiv = len(payload["workers"]["divergences"])
     n_bdiv = len(payload["batched"]["divergences"])
     n_kdiv = len(payload["kv"]["divergences"])
+    n_fdiv = len(payload["fault"]["divergences"])
     rows = [
         Row("sweep/cells", payload["cells"],
             f"plans={'+'.join(payload['matrix']['plans'])}"),
@@ -391,6 +434,12 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             "(must be 0)"),
         Row("sweep/kv_divergences", n_kdiv,
             "kv measure-mode fields unequal to fork cells (must be 0)"),
+        Row("sweep/fault_cells_per_second",
+            payload["fault_cells_per_second"],
+            f"measure mode, {payload['fault']['cells']} cells "
+            "(nested + poison at_every_step)"),
+        Row("sweep/fault_divergences", n_fdiv,
+            "fault measure-mode fields unequal to fork cells (must be 0)"),
     ]
     write_json(BENCH_SWEEP_JSON, payload)
     write_json(BENCH_BATCHED_JSON, {
@@ -424,6 +473,11 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
         raise AssertionError(
             f"kv measure-mode cells diverged from fork cells on "
             f"{n_kdiv} cells: {payload['kv']['divergences'][:3]} "
+            f"(see {BENCH_SWEEP_JSON})")
+    if n_fdiv:
+        raise AssertionError(
+            f"fault-injection measure-mode cells diverged from fork "
+            f"cells on {n_fdiv} cells: {payload['fault']['divergences'][:3]} "
             f"(see {BENCH_SWEEP_JSON})")
     return rows
 

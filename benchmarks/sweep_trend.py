@@ -1,6 +1,6 @@
 """BENCH_sweep.json trend tracker — the dense-sweep artifact diff.
 
-The ``sweep`` suite's three hard divergence gates catch *correctness*
+The ``sweep`` suite's hard divergence gates catch *correctness*
 regressions; this tool catches *performance* regressions the gates
 cannot see: a change that keeps fork==rerun cell-for-cell but quietly
 makes the fork engine re-copy every snapshot would sail through CI
@@ -27,15 +27,18 @@ import sys
 from typing import Dict, List
 
 # the trend columns BENCH_sweep.json has carried since schema v2;
-# batched_speedup and kv_cells_per_second arrived later, so
-# compare_speedups tolerates baselines that predate any one metric
-# (prev-missing is skipped, new-missing is a schema-drift failure).
-# kv_cells_per_second is an absolute throughput rather than a ratio,
-# but the baseline comes from the same runner class and the 2x window
-# absorbs host noise — what it catches is the KV restore/recover/audit
-# path slipping from O(touched lines) to O(store footprint).
+# batched_speedup, kv_cells_per_second, and fault_cells_per_second
+# arrived later, so compare_speedups tolerates baselines that predate
+# any one metric (prev-missing is skipped, new-missing is a
+# schema-drift failure). The *_cells_per_second columns are absolute
+# throughputs rather than ratios, but the baseline comes from the same
+# runner class and the 2x window absorbs host noise — what they catch
+# is the KV restore/recover/audit path (kv_) or the fault harness's
+# golden + retried-recovery path (fault_) slipping from O(touched
+# lines) to O(store footprint).
 TREND_METRICS = ("speedup", "measure_speedup", "total_speedup",
-                 "batched_speedup", "kv_cells_per_second")
+                 "batched_speedup", "kv_cells_per_second",
+                 "fault_cells_per_second")
 
 
 def load_artifact(path: str):

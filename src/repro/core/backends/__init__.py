@@ -15,11 +15,13 @@ environment variable. See README.md in this directory.
 
 from __future__ import annotations
 
-from .base import LineSurvival, MemoryBackend, select_survivors
+from .base import (LineSurvival, MediaFault, MemoryBackend,
+                   corrupt_image_words, select_survivors)
 from .reference import ReferenceLRUBackend
 from .vectorized import VectorizedBackend
 
 __all__ = ["MemoryBackend", "LineSurvival", "select_survivors",
+           "MediaFault", "corrupt_image_words",
            "ReferenceLRUBackend", "VectorizedBackend",
            "BACKENDS", "make_backend"]
 

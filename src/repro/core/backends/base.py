@@ -54,6 +54,7 @@ from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 import numpy as np
 
 __all__ = ["MemoryBackend", "OpAccumulator", "LineSurvival",
+           "MediaFault", "corrupt_image_words",
            "select_survivors", "select_survivor_words", "entry_span",
            "word_spans", "WORD_BYTES"]
 
@@ -154,6 +155,90 @@ def select_survivors(eviction_order: Sequence[Tuple[str, int]],
     this is the ``granularity="line"`` path both backends call.
     """
     return _select_units(eviction_order, survival)
+
+
+MEDIA_FAULT_KINDS = ("poison", "bitflip")
+
+
+@dataclasses.dataclass(frozen=True)
+class MediaFault:
+    """Seeded silent media corruption of the persistent image.
+
+    Models post-crash data corruption (EasyCrash's observation that
+    restart safety is decided by *corrupted*, not merely truncated,
+    state): ``words`` machine words (:data:`WORD_BYTES`-sized units of
+    the NVM image) are corrupted after the crash image forms, with no
+    traffic charged and no dirty-state interaction — the hardware lied,
+    and nothing in the cache model saw it happen.
+
+      kind="poison"   each selected word is overwritten with seeded
+                      random bytes (a dead/poisoned line returning
+                      garbage);
+      kind="bitflip"  one seeded bit of each selected word flips (the
+                      classic retention/ECC-escape fault).
+
+    Selection and payloads are pure functions of (spec, image shape):
+    :func:`corrupt_image_words` operates on the backend-independent
+    image dict, so the corrupted image is byte-identical under the
+    reference and vectorized backends by construction — the same
+    contract ``select_survivors`` gives torn crashes.
+    """
+
+    words: int = 1
+    seed: int = 0
+    kind: str = "poison"
+
+    def __post_init__(self):
+        if self.words < 1:
+            raise ValueError("fault words must be >= 1")
+        if self.kind not in MEDIA_FAULT_KINDS:
+            raise ValueError(f"unknown media-fault kind {self.kind!r} "
+                             f"(choose from {MEDIA_FAULT_KINDS})")
+
+    def describe(self) -> str:
+        return f"{self.kind}:w{self.words}:s{self.seed}"
+
+
+def corrupt_image_words(image, fault: MediaFault,
+                        region_names: Optional[Sequence[str]] = None
+                        ) -> List[Tuple[str, int, int]]:
+    """Apply ``fault`` to the NVM image dict in place; returns the
+    corrupted ``(name, lo, hi)`` byte spans (sorted canonical order).
+
+    The unit population is every :data:`WORD_BYTES`-aligned byte span of
+    every targeted region (``region_names`` restricts it; default = all
+    regions), enumerated in sorted-name order so the selection — like
+    :func:`_select_units`'s random mode — is canonical and
+    backend-independent. When ``fault.words`` exceeds the population,
+    every word is corrupted. Poison payloads are seeded random bytes,
+    XORed with 0xFF if they happen to equal the current contents (a
+    fault must *change* the word — a silent no-op would make detection
+    gates vacuous); bitflips flip one seeded bit per word.
+    """
+    names = sorted(image) if region_names is None else sorted(region_names)
+    units: List[Tuple[str, int, int]] = []
+    for name in names:
+        nbytes = image[name].nbytes
+        for lo in range(0, nbytes, WORD_BYTES):
+            units.append((name, lo, min(lo + WORD_BYTES, nbytes)))
+    if not units:
+        return []
+    rng = np.random.default_rng(fault.seed)
+    k = min(fault.words, len(units))
+    idx = np.sort(rng.choice(len(units), size=k, replace=False))
+    chosen = [units[i] for i in idx]
+    for name, lo, hi in chosen:
+        view = image[name].view(np.uint8)[lo:hi]
+        if fault.kind == "poison":
+            payload = rng.integers(0, 256, size=hi - lo, dtype=np.uint8)
+            if np.array_equal(payload, view):
+                payload = payload ^ np.uint8(0xFF)
+            view[:] = payload
+        else:  # bitflip
+            byte = int(rng.integers(0, hi - lo))
+            bit = int(rng.integers(0, 8))
+            view[byte] ^= np.uint8(1 << bit)
+    return chosen
 
 
 def entry_span(entry: int, elems_per_entry: int, n_elems: int

@@ -41,7 +41,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .backends import make_backend
+from .backends import corrupt_image_words, make_backend
 from .backends.reference import ReferenceLRUBackend
 
 __all__ = [
@@ -51,7 +51,16 @@ __all__ = [
     "VolatileCache",
     "CrashEmulator",
     "EmuSnapshot",
+    "NestedCrashFault",
 ]
+
+
+class NestedCrashFault(RuntimeError):
+    """Raised by the emulator when an armed nested-crash trap fires:
+    power failed *again*, mid-recovery. Strategies must let it propagate
+    (recovery code never catches it); the driver crashes the emulator a
+    second time and retries recovery — which is what makes re-entrancy
+    a tested property instead of an assumption."""
 
 # Back-compat alias: the pre-backend cache class lives on as the
 # reference backend (same semantics, entry-at-a-time OrderedDict).
@@ -281,6 +290,11 @@ class CrashEmulator:
         # clean cache, so crash() must reload them (see crash())
         self._truth_desynced: set = set()
         self.crashed = False
+        # nested-crash trap: when armed (int), every completed emulator
+        # action during recovery decrements it; reaching zero raises
+        # NestedCrashFault. Never part of snapshots — it is armed only
+        # transiently around a recovery attempt (see arm_nested_crash)
+        self._nested_trap: Optional[int] = None
 
     # back-compat: the pre-backend attribute name for the cache layer
     @property
@@ -312,23 +326,53 @@ class CrashEmulator:
         self._cow_image.pop(name, None)
         self._truth_desynced.discard(name)
 
+    # nested-crash trap (fault injection during recovery) ----------------------
+    def arm_nested_crash(self, after_actions: int) -> None:
+        """Arm the trap: the ``after_actions``-th completed emulator
+        action from now raises :class:`NestedCrashFault` — power fails
+        again while recovery is mutating state. An *action* is any
+        completed facade operation (write/read/flush/drain), a
+        recovery-path truth resync, or an undo-record application: the
+        units in which a recovery procedure makes externally-visible
+        progress, so the trap lands between two of them, exactly where
+        a real second power loss could."""
+        if after_actions < 1:
+            raise ValueError("nested crash must fire after >= 1 actions")
+        self._nested_trap = int(after_actions)
+
+    def disarm_nested_crash(self) -> None:
+        self._nested_trap = None
+
+    def _trap_tick(self) -> None:
+        if self._nested_trap is None:
+            return
+        self._nested_trap -= 1
+        if self._nested_trap <= 0:
+            self._nested_trap = None
+            raise NestedCrashFault(
+                "nested crash: power failed during recovery")
+
     # program-visible operations (facade over the backend) --------------------
     def write(self, name: str, lo: int, hi: int) -> None:
         """Program stored truth[lo:hi) of ``name``."""
         self._truth_epoch[name] += 1
         self.backend.write(name, lo, hi)
+        self._trap_tick()
 
     def read(self, name: str, lo: int, hi: int) -> None:
         """Program loaded truth[lo:hi) of ``name``."""
         self.backend.read(name, lo, hi)
+        self._trap_tick()
 
     def flush(self, name: str, lo: int = 0, hi: Optional[int] = None) -> None:
         """CLFLUSH the lines covering truth[lo:hi) of ``name``."""
         self.backend.flush(name, lo, hi)
+        self._trap_tick()
 
     def drain(self) -> None:
         """Write back everything (normal program termination)."""
         self.backend.drain()
+        self._trap_tick()
 
     # crash / recovery ---------------------------------------------------------
     def crash(self, survival=None) -> int:
@@ -370,6 +414,44 @@ class CrashEmulator:
         self._truth[name][:] = self.store.image[name]
         self._truth_epoch[name] += 1
         self._truth_desynced.discard(name)
+        self._trap_tick()
+
+    def apply_undo(self, name: str, lo: int, hi: int,
+                   old: np.ndarray) -> None:
+        """Apply one undo-log record: rewrite image[lo:hi) of ``name``
+        with pre-transaction values (element indices). The single
+        emulator-mediated path for rollback image writes — epoch bump
+        and divergence note happen BEFORE the nested-crash trap can
+        fire, so a re-crash between two undo records still sees a
+        coherent image/snapshot state and reloads truth from it."""
+        self.store.image[name][lo:hi] = old
+        self.store.mark_image_dirty(name)
+        # the image now holds pre-tx values truth never saw — a further
+        # crash() must reload truth even with a clean cache
+        self.note_image_divergence(name)
+        self.store.stats.charge_write(old.nbytes, self.cfg)
+        self._trap_tick()
+
+    def inject_media_fault(self, fault, region_names=None):
+        """Silently corrupt the post-crash NVM image (a
+        :class:`~repro.core.backends.MediaFault`): seeded word poisoning
+        or bit flips via the shared, backend-independent
+        :func:`~repro.core.backends.corrupt_image_words`. Only valid on
+        a crashed emulator — media faults model what recovery *finds*,
+        not in-flight corruption. Truth is reloaded for the affected
+        regions (post-crash truth mirrors the image); nothing is charged
+        (the hardware lied for free). Returns the corrupted
+        ``(name, lo, hi)`` byte spans."""
+        if not self.crashed:
+            raise RuntimeError(
+                "inject_media_fault requires a crashed emulator "
+                "(call crash() first)")
+        spans = corrupt_image_words(self.store.image, fault, region_names)
+        for name in sorted({name for name, _lo, _hi in spans}):
+            self.store.mark_image_dirty(name)
+            self._truth[name][:] = self.store.image[name]
+            self._truth_epoch[name] += 1
+        return spans
 
     def note_image_divergence(self, name: str) -> None:
         """Record that ``name``'s NVM image was just rewritten from data

@@ -106,16 +106,17 @@ class UndoLogTx:
     def rollback_after_crash(self) -> "RollbackReport":
         """Recovery path: validate the log, reject any torn tail, then
         apply the valid undo records (newest first) to the NVM image,
-        restoring pre-transaction values."""
+        restoring pre-transaction values.
+
+        Re-entrant under nested crashes: each record routes through
+        ``CrashEmulator.apply_undo`` (where the nested-crash trap can
+        fire between records), and the log is cleared only after every
+        record applied — a retry re-applies all of them, which is
+        idempotent because undo records hold absolute old values."""
         valid = self.validate_log()
         rejected = len(self._log) - valid
         for name, lo, hi, old, _crc in reversed(self._log[:valid]):
-            self._emu.store.image[name][lo:hi] = old
-            self._emu.store.mark_image_dirty(name)
-            # the image now holds pre-tx values truth never saw — a
-            # further crash() must reload truth even with a clean cache
-            self._emu.note_image_divergence(name)
-            self._emu.store.stats.charge_write(old.nbytes, self._emu.cfg)
+            self._emu.apply_undo(name, lo, hi, old)
         self._log.clear()
         return RollbackReport(entries_applied=valid,
                               entries_rejected=rejected)

@@ -25,7 +25,12 @@ Module map:
               torn crash a parameterized *line-survival* image: a seeded
               subset of the dirty cache lines persisted before power
               loss (the WITCHER/EasyCrash crash-state space), one cell
-              per sample.
+              per sample. ``fault=FaultSpec(...)`` arms a fault
+              campaign on every crash point: nested crashes that
+              re-crash *during recovery* (re-entrancy certification
+              against the single-crash golden cell) and/or seeded
+              media faults that silently poison the post-crash image
+              (detection-coverage certification).
   kv          KVWorkload — the beyond-paper persistent KV-serving
               family: an NVM-backed store (A/B-versioned hash index +
               append-only value-log extents) driven by seeded zipfian
@@ -70,8 +75,8 @@ Ten-line tour::
                   out_json="BENCH_scenarios.json")
 """
 
-from ..core.backends import LineSurvival
-from .crashplan import CrashPlan, CrashPoint, TornSpec
+from ..core.backends import LineSurvival, MediaFault
+from .crashplan import CrashPlan, CrashPoint, FaultSpec, TornSpec
 from .costmodel import (
     MECHANISM_CASES,
     MechanismCase,
@@ -126,6 +131,7 @@ from .driver import (
 
 __all__ = [
     "CrashPlan", "CrashPoint", "TornSpec", "LineSurvival",
+    "FaultSpec", "MediaFault",
     "MECHANISM_CASES", "MechanismCase", "StepCostProfile",
     "mechanism_cases", "mechanism_step_seconds",
     "cg_step_profile", "mm_step_profile", "kv_step_profile",

@@ -607,6 +607,7 @@ def _assemble(wl: Workload, strat: ConsistencyStrategy, cell: _BatchedCell,
         crash_step=crash_step, torn=point.torn,
         torn_survival=(point.survival.describe()
                        if point.survival is not None else None),
+        fault=None,  # fault-carrying points route to per-cell fallback
         steps_total=n, steps_done=n,
         restart_point=rec.restart_point, resume_step=rec.resume_step,
         steps_lost=lost, steps_recomputed=redo,
@@ -695,7 +696,10 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
         for point in points:
             if point.step is None:
                 emit.append(("full", desc, point, None))
-            elif evaluator is None:
+            elif evaluator is None or point.fault is not None:
+                # fault cells need the live golden-compare recovery
+                # harness (nested-crash retry, media-fault injection) —
+                # always the per-cell measure path
                 emit.append(("fallback", desc, point, None))
             else:
                 key = (point.step, point.torn)

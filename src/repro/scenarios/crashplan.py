@@ -44,16 +44,16 @@ the case that exercises rollback paths. Two spellings:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Union, TYPE_CHECKING
+from typing import List, Optional, Tuple, Union, TYPE_CHECKING
 
 import numpy as np
 
-from ..core.backends import LineSurvival
+from ..core.backends import LineSurvival, MediaFault
 
 if TYPE_CHECKING:  # pragma: no cover
     from .workloads import Workload
 
-__all__ = ["CrashPlan", "CrashPoint", "TornSpec"]
+__all__ = ["CrashPlan", "CrashPoint", "TornSpec", "FaultSpec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +90,112 @@ class TornSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Recovery-time fault injection attached to a crash point — what
+    goes wrong *after* the crash, while (or before) recovery runs.
+
+    Two orthogonal fault families (combinable in principle, but the
+    shipped campaigns keep them separate so the golden-comparison
+    classes stay unambiguous):
+
+    * **Nested crash** (``nested_after`` set): power fails again after
+      the ``nested_after``-th recovery action (see
+      :meth:`CrashEmulator.arm_nested_crash`), ``nested_crashes`` times
+      in total, each re-crash with its own derived torn line survival
+      (``nested_fraction`` / ``nested_mode``; fraction 0 = the classic
+      all-or-nothing re-crash). The driver retries recovery up to
+      ``max_attempts`` times; strategies whose recovery performs no
+      emulator actions (a post-commit undo-log boundary, XSBench's
+      read-only pointer recovery) never trip the trap and classify
+      through the base path.
+    * **Media fault** (``poison_words`` > 0): the post-crash image is
+      silently corrupted (:class:`~repro.core.backends.MediaFault`)
+      before recovery runs — ``poison_regions`` restricts targets to
+      exact live-region names or ``"prefix*"`` globs (None = every
+      live region); an empty match injects nothing.
+    """
+
+    nested_after: Optional[int] = None
+    nested_fraction: float = 0.0
+    nested_mode: str = "random"
+    nested_crashes: int = 1
+    max_attempts: int = 3
+    seed: int = 0
+    poison_words: int = 0
+    poison_kind: str = "poison"
+    poison_regions: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.nested_after is None and self.poison_words <= 0:
+            raise ValueError(
+                "FaultSpec must inject something: set nested_after "
+                "and/or poison_words")
+        if self.nested_after is not None:
+            if self.nested_after < 1:
+                raise ValueError("nested_after must be >= 1")
+            if self.nested_crashes < 1:
+                raise ValueError("nested_crashes must be >= 1")
+            if self.max_attempts <= self.nested_crashes:
+                raise ValueError(
+                    "max_attempts must exceed nested_crashes (the final "
+                    "attempt must be allowed to complete)")
+            # LineSurvival owns fraction/mode validation
+            LineSurvival(self.nested_fraction, self.seed, self.nested_mode)
+        if self.poison_words > 0:
+            MediaFault(self.poison_words, self.seed, self.poison_kind)
+        if self.poison_regions is not None:
+            object.__setattr__(self, "poison_regions",
+                               tuple(self.poison_regions))
+
+    def nested_survival(self, firing: int) -> Optional[LineSurvival]:
+        """Line survival of re-crash number ``firing`` (1-based). Pure
+        in (spec, firing): retried resolutions replay identically."""
+        if self.nested_fraction <= 0.0:
+            return None
+        return LineSurvival(self.nested_fraction,
+                            self.seed + 101 * int(firing),
+                            self.nested_mode)
+
+    def media_fault(self) -> Optional[MediaFault]:
+        if self.poison_words <= 0:
+            return None
+        return MediaFault(self.poison_words, self.seed, self.poison_kind)
+
+    def resolve_poison_regions(self, live_names) -> List[str]:
+        """Ground ``poison_regions`` against a workload's live-region
+        names: exact matches plus ``"prefix*"`` glob expansion, in
+        sorted order (the canonical ordering corrupt_image_words
+        selects over)."""
+        live = sorted(live_names)
+        if self.poison_regions is None:
+            return live
+        out = set()
+        for pat in self.poison_regions:
+            if pat.endswith("*"):
+                out.update(n for n in live if n.startswith(pat[:-1]))
+            elif pat in live:
+                out.add(pat)
+        return sorted(out)
+
+    def describe(self) -> str:
+        parts = []
+        if self.nested_after is not None:
+            p = f"nested:a{self.nested_after}:f{self.nested_fraction:g}"
+            p += f":s{self.seed}"
+            if self.nested_mode != "random":
+                p += f":{self.nested_mode}"
+            if self.nested_crashes > 1:
+                p += f":x{self.nested_crashes}"
+            parts.append(p)
+        if self.poison_words > 0:
+            p = f"{self.poison_kind}:w{self.poison_words}:s{self.seed}"
+            if self.poison_regions is not None:
+                p += ":" + ",".join(self.poison_regions)
+            parts.append(p)
+        return "+".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
 class CrashPoint:
     """A concrete, grounded crash point for one scenario run."""
 
@@ -98,13 +204,19 @@ class CrashPoint:
     # line-survival subset for sub-step torn crashes; None = the
     # classic all-or-nothing crash (every dirty line lost)
     survival: Optional[LineSurvival] = None
+    # recovery-time fault injection (nested crash / media fault); None
+    # = the classic crash-once-recover-once cell
+    fault: Optional[FaultSpec] = None
 
     def describe(self) -> str:
         if self.step is None:
             return "no_crash"
+        fault = (f":fault[{self.fault.describe()}]"
+                 if self.fault is not None else "")
         if self.survival is not None:
-            return f"step={self.step}:torn[{self.survival.describe()}]"
-        return f"step={self.step}" + (":torn" if self.torn else "")
+            return (f"step={self.step}:torn[{self.survival.describe()}]"
+                    + fault)
+        return f"step={self.step}" + (":torn" if self.torn else "") + fault
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +229,9 @@ class CrashPlan:
     count: int = 1
     seed: int = 0
     torn: Union[bool, TornSpec] = False
+    # recovery-time fault injection, applied to every crash point the
+    # plan resolves (no_crash plans never carry one)
+    fault: Optional[FaultSpec] = None
 
     # -- constructors ---------------------------------------------------------
     @classmethod
@@ -124,34 +239,41 @@ class CrashPlan:
         return cls(kind="none")
 
     @classmethod
-    def at_step(cls, step: int,
-                torn: Union[bool, TornSpec] = False) -> "CrashPlan":
+    def at_step(cls, step: int, torn: Union[bool, TornSpec] = False,
+                fault: Optional[FaultSpec] = None) -> "CrashPlan":
         if step < 0:
             raise ValueError("crash step must be >= 0")
-        return cls(kind="step", step=int(step), torn=torn)
+        return cls(kind="step", step=int(step), torn=torn, fault=fault)
 
     @classmethod
     def at_phase(cls, phase: str, index: int,
-                 torn: Union[bool, TornSpec] = False) -> "CrashPlan":
-        return cls(kind="phase", phase=phase, index=int(index), torn=torn)
+                 torn: Union[bool, TornSpec] = False,
+                 fault: Optional[FaultSpec] = None) -> "CrashPlan":
+        return cls(kind="phase", phase=phase, index=int(index), torn=torn,
+                   fault=fault)
 
     @classmethod
     def at_fraction(cls, fraction: float,
-                    torn: Union[bool, TornSpec] = False) -> "CrashPlan":
+                    torn: Union[bool, TornSpec] = False,
+                    fault: Optional[FaultSpec] = None) -> "CrashPlan":
         if not 0.0 <= fraction <= 1.0:
             raise ValueError("fraction must be in [0, 1]")
-        return cls(kind="fraction", fraction=float(fraction), torn=torn)
+        return cls(kind="fraction", fraction=float(fraction), torn=torn,
+                   fault=fault)
 
     @classmethod
     def random(cls, count: int = 1, seed: int = 0,
-               torn: Union[bool, TornSpec] = False) -> "CrashPlan":
+               torn: Union[bool, TornSpec] = False,
+               fault: Optional[FaultSpec] = None) -> "CrashPlan":
         if count < 1:
             raise ValueError("count must be >= 1")
-        return cls(kind="random", count=int(count), seed=int(seed), torn=torn)
+        return cls(kind="random", count=int(count), seed=int(seed),
+                   torn=torn, fault=fault)
 
     @classmethod
-    def at_every_step(cls, torn: Union[bool, TornSpec] = False) -> "CrashPlan":
-        return cls(kind="every", torn=torn)
+    def at_every_step(cls, torn: Union[bool, TornSpec] = False,
+                      fault: Optional[FaultSpec] = None) -> "CrashPlan":
+        return cls(kind="every", torn=torn, fault=fault)
 
     # -- grounding ------------------------------------------------------------
     def _points_at(self, step: int) -> List[CrashPoint]:
@@ -159,9 +281,10 @@ class CrashPlan:
         point for boolean ``torn``, one per survival sample for a
         :class:`TornSpec` (each with its own derived seed)."""
         if isinstance(self.torn, TornSpec):
-            return [CrashPoint(step, True, self.torn.survival_for(j))
+            return [CrashPoint(step, True, self.torn.survival_for(j),
+                               self.fault)
                     for j in range(self.torn.samples)]
-        return [CrashPoint(step, bool(self.torn))]
+        return [CrashPoint(step, bool(self.torn), None, self.fault)]
 
     def resolve(self, workload: "Workload") -> List[CrashPoint]:
         """Ground this plan against a set-up workload. Returns one
@@ -220,6 +343,8 @@ class CrashPlan:
             torn = f":torn[{self.torn.describe()}]"
         else:
             torn = ":torn" if self.torn else ""
+        if self.fault is not None:
+            torn += f":fault[{self.fault.describe()}]"
         if self.kind == "none":
             return "no_crash"
         if self.kind == "step":

@@ -66,10 +66,11 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.nvm import NVMConfig
+from ..core.nvm import NestedCrashFault, NVMConfig
 from .crashplan import CrashPlan, CrashPoint
-from .strategies import ConsistencyStrategy, make_strategy
-from .workloads import Workload, make_workload
+from .strategies import STRATEGIES, ConsistencyStrategy, make_strategy
+from .workloads import (WORKLOADS, Workload, make_workload,
+                        unknown_name_error)
 
 __all__ = ["ScenarioResult", "run_scenario", "sweep", "DEFAULT_SWEEP_PLANS",
            "AVG_STEP_JITTER_FLOOR", "SWEEP_ENGINES", "SWEEP_MODES",
@@ -132,6 +133,108 @@ def measure_divergence_fields(measured: "ScenarioResult",
     return sorted(k for k in dm if k not in df or dm[k] != df[k])
 
 
+def _digests_equal(a, b) -> bool:
+    """np.array_equal-aware dict equality for ``restart_digest`` values
+    (shared by the fork engine's byte-certification and the fault
+    campaigns' golden-cell comparison)."""
+    if set(a) != set(b):
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            if not np.array_equal(np.asarray(va), np.asarray(vb)):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+def _crash_and_recover(wl: Workload, strat: ConsistencyStrategy,
+                       point: CrashPoint,
+                       recover: bool = True) -> Optional["RecoveryResult"]:
+    """Crash at ``point`` and run strategy recovery, honoring the
+    point's recovery-time :class:`~repro.scenarios.crashplan.FaultSpec`.
+
+    Fault-free points (and ``recover=False``) keep the classic shape:
+    one crash, one recovery. A faulted point first runs the *golden*
+    pass — the identical crash with no fault, recovered once — records
+    its restart bookkeeping and ``restart_digest``, and rewinds the
+    workload+strategy to the pre-crash snapshot (``crash()`` is
+    deterministic, so the faulted re-crash produces a byte-identical
+    image). The faulted pass then injects the media fault (if any) into
+    the post-crash image and retries recovery under the armed
+    nested-crash trap, re-crashing with the spec's derived torn
+    survival each time the trap fires, up to ``max_attempts``.
+
+    Returns the final RecoveryResult annotated with the fault
+    bookkeeping ``classify_recovery`` consumes (``recovery_attempts``,
+    ``nested_crashes``, ``fault_words_injected``,
+    ``recovery_golden_match``) — or None when recovery never completed
+    within the attempt budget (the cell classifies ``unrecovered``)."""
+    emu = wl.emu
+    crash_step, torn = point.step, point.torn
+    fault = point.fault
+    if not recover:
+        emu.crash(point.survival)
+        return None
+    if fault is None:
+        emu.crash(point.survival)
+        return strat.recover(crash_step, torn, point.survival)
+
+    # golden pass: the single-crash cell this faulted cell is certified
+    # against. The snapshot rewind restores emulator state (truth,
+    # image, cache, stats) AND mechanism state, so the faulted pass
+    # re-crashes from exactly the same pre-crash world.
+    pre_wl = wl.snapshot()
+    pre_strat = strat.snapshot()
+    emu.crash(point.survival)
+    golden = strat.recover(crash_step, torn, point.survival)
+    golden_restart = (golden.restart_point, golden.resume_step)
+    golden_digest = wl.restart_digest(golden.restart_point)
+    wl.restore_snapshot(pre_wl)
+    strat.restore_snapshot(pre_strat)
+
+    # faulted pass
+    emu.crash(point.survival)
+    injected = []
+    mf = fault.media_fault()
+    if mf is not None:
+        names = fault.resolve_poison_regions(
+            r.name for r in wl.live_regions())
+        if names:
+            injected = emu.inject_media_fault(mf, names)
+    rec = None
+    firings = 0
+    attempts = 0
+    while attempts < fault.max_attempts:
+        attempts += 1
+        if fault.nested_after is not None and firings < fault.nested_crashes:
+            emu.arm_nested_crash(fault.nested_after)
+        try:
+            rec = strat.recover(crash_step, torn, point.survival)
+            emu.disarm_nested_crash()
+            break
+        except NestedCrashFault:
+            firings += 1
+            emu.crash(fault.nested_survival(firings))
+    if rec is None:
+        emu.disarm_nested_crash()
+        return None
+
+    rec.info["recovery_attempts"] = attempts
+    if fault.nested_after is not None:
+        rec.info["nested_crashes"] = firings
+    if mf is not None:
+        rec.info["fault_words_injected"] = len(injected)
+    match = (rec.restart_point, rec.resume_step) == golden_restart
+    if match:
+        digest = wl.restart_digest(rec.restart_point)
+        if digest is not None and golden_digest is not None:
+            match = _digests_equal(digest, golden_digest)
+    rec.info["recovery_golden_match"] = bool(match)
+    return rec
+
+
 def classify_recovery(crashed: bool, crash_step: Optional[int],
                       rec: Optional["RecoveryResult"],
                       survival=None) -> str:
@@ -185,11 +288,58 @@ def classify_recovery(crashed: bool, crash_step: Optional[int],
                            persisted index that replay double-counts)
                            or work was lost that replay cannot
                            re-derive (the lost_updates condition).
+
+    Cells whose crash point carried a
+    :class:`~repro.scenarios.crashplan.FaultSpec` are certified against
+    the *golden* single-crash cell (same crash, no fault — see
+    :func:`_crash_and_recover`) and classify through four fault classes,
+    checked before everything above except ``unrecovered`` (a fault
+    campaign's question — did recovery survive the fault, did the
+    machinery see the corruption — outranks the ordinary bookkeeping,
+    which the golden comparison already covers):
+
+      recovery_idempotent  >= 1 nested crash interrupted recovery and
+                           the retried recovery still landed on exactly
+                           the golden cell's restart point and digest —
+                           recovery is re-entrant here, proven not
+                           assumed;
+      recovery_diverged    the nested crash changed where (or on what
+                           state) recovery landed — the WITCHER class
+                           of crash-unsafe recovery code;
+      fault_detected       silently corrupted post-crash state was
+                           positively flagged by the mechanism's
+                           integrity machinery (invariant scan, ABFT
+                           checksums, undo-log CRCs, KV row checksums);
+      fault_silent         the corruption was neither flagged nor
+                           landed on golden-equivalent state: the
+                           recovered run proceeds on bad data with no
+                           signal — the coverage hole this class exists
+                           to surface. (An injected fault that recovery
+                           neither sees nor is affected by — e.g. a
+                           poisoned version slot the backward scan never
+                           visits — is harmless and falls through to the
+                           ordinary classes.)
     """
     if not crashed or crash_step is None:
         return "complete"
     if rec is None:
         return "unrecovered"
+    if int(rec.info.get("nested_crashes") or 0) > 0:
+        return ("recovery_idempotent"
+                if rec.info.get("recovery_golden_match")
+                else "recovery_diverged")
+    if int(rec.info.get("fault_words_injected") or 0) > 0:
+        detected = bool(rec.info.get("torn_flagged")
+                        or rec.info.get("state_corrupt")
+                        or int(rec.info.get("log_entries_rejected") or 0) > 0
+                        or int(rec.info.get("slots_dropped") or 0) > 0
+                        or int(rec.info.get("corrected_elements") or 0) > 0)
+        if detected:
+            return "fault_detected"
+        if not rec.info.get("recovery_golden_match"):
+            return "fault_silent"
+        # injected but undetected AND golden-equivalent: harmless —
+        # fall through to the ordinary classes
     if int(rec.info.get("atomicity_violations") or 0) > 0:
         return "atomicity_violation"
     if int(rec.info.get("durability_violations") or 0) > 0:
@@ -227,6 +377,10 @@ class ScenarioResult:
     # identity: multi-sample TornSpec plans emit several cells at the
     # same (plan, crash_step) that differ only here
     torn_survival: Optional[str]
+    # fault campaign spec of the crash point ("nested:a3:f0.5:s0",
+    # "poison:w2:s1:kv.index"); None for ordinary cells. Part of the
+    # cell's identity, like torn_survival
+    fault: Optional[str]
     steps_total: int
     steps_done: int
     restart_point: Optional[int]     # newest surviving step; -1 => scratch
@@ -248,9 +402,10 @@ class ScenarioResult:
     # in every mode, unlike the end-of-run ``correct`` bit
     correctness_class: str
     # measure-mode byte-certification (fork engine only): recovered
-    # state byte-equals the golden-prefix digest at the restart point.
-    # None when not computable (rerun engine, full mode, scratch
-    # restarts, or no golden snapshot at the restart step)
+    # state byte-equals the golden-prefix digest at the restart point
+    # (scratch restarts certify against the pre-step-0 snapshot). None
+    # when not computable (rerun engine, full mode, or no golden
+    # snapshot at the restart step)
     state_certified: Optional[bool]
     metrics: Optional[Dict[str, float]]
     traffic: Optional[Dict[str, int]]
@@ -259,7 +414,8 @@ class ScenarioResult:
     def to_json_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d.pop("info")
-        for f in FULL_RUN_FIELDS + FORK_ONLY_FIELDS + ("torn_survival",):
+        for f in FULL_RUN_FIELDS + FORK_ONLY_FIELDS + ("torn_survival",
+                                                       "fault"):
             if d[f] is None:
                 d.pop(f)
         return _jsonable(d)
@@ -365,9 +521,8 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
     steps_done = n
 
     if crashed:
-        emu.crash(point.survival)
-        if recover:
-            rec = strat.recover(crash_step, torn, point.survival)
+        rec = _crash_and_recover(wl, strat, point, recover)
+        if rec is not None:
             # oracle-side audit of the recovered state (durability /
             # atomicity violation counts) BEFORE the tail replay papers
             # over what recovery actually produced
@@ -382,6 +537,10 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
                 strat.after_step(j)
         else:
             steps_done = crash_step + 1
+            if recover:
+                # recovery itself died (nested crashes exhausted every
+                # attempt): nothing recovered, nothing replayed
+                lost = crash_step + 1
 
     report = wl.finalize()
     overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
@@ -401,6 +560,7 @@ def _finish(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         crash_step=crash_step, torn=torn,
         torn_survival=(point.survival.describe()
                        if point.survival is not None else None),
+        fault=(point.fault.describe() if point.fault is not None else None),
         steps_total=n, steps_done=steps_done,
         restart_point=restart, resume_step=resume,
         steps_lost=lost, steps_recomputed=redo,
@@ -452,19 +612,30 @@ def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
                                modeled_durs)
 
     torn_before = emu.stats.torn_bytes_persisted
-    emu.crash(point.survival)
+    rec = _crash_and_recover(wl, strat, point)
+    # the golden pass (fault cells) rewinds its own traffic via
+    # restore_snapshot, so the delta covers exactly the faulted crash
+    # plus any nested re-crashes
     torn_persisted = emu.stats.torn_bytes_persisted - torn_before
-    rec = strat.recover(crash_step, torn, point.survival)
-    # audit BEFORE certify: the certification closure may restore the
-    # workload to the golden state, and the audit must see what recovery
-    # actually produced
-    wl.audit_recovery(rec, crash_step, torn)
-    lost, redo = _recovery_bookkeeping(rec, crash_step)
+    if rec is not None:
+        # audit BEFORE certify: the certification closure may restore
+        # the workload to the golden state, and the audit must see what
+        # recovery actually produced
+        wl.audit_recovery(rec, crash_step, torn)
+        lost, redo = _recovery_bookkeeping(rec, crash_step)
+        restart, resume = rec.restart_point, rec.resume_step
+        detect_s = rec.detect_seconds
+        certified = certify(rec) if certify is not None else None
+        info = dict(rec.info)
+    else:
+        # recovery died under nested crashes on every allowed attempt
+        lost, redo = crash_step + 1, 0
+        restart = resume = None
+        detect_s = 0.0
+        certified = None
+        info = {}
     overhead = strat.modeled_overhead_seconds(wl.step_cost_profile(),
                                               emu.cfg, crash_step + 1)
-    certified = certify(rec) if certify is not None else None
-
-    info = dict(rec.info)
     if point.survival is not None:
         # measure cells carry no end-of-run traffic dict; surface this
         # crash's in-flight writebacks for fig_torn's survivor budget
@@ -476,10 +647,11 @@ def _measure(wl: Workload, strat: ConsistencyStrategy, point: CrashPoint,
         crash_step=crash_step, torn=torn,
         torn_survival=(point.survival.describe()
                        if point.survival is not None else None),
+        fault=(point.fault.describe() if point.fault is not None else None),
         steps_total=n, steps_done=n,
-        restart_point=rec.restart_point, resume_step=rec.resume_step,
+        restart_point=restart, resume_step=resume,
         steps_lost=lost, steps_recomputed=redo,
-        detect_seconds=rec.detect_seconds, resume_seconds=avg_step * redo,
+        detect_seconds=detect_s, resume_seconds=avg_step * redo,
         avg_step_seconds=avg_step,
         overhead_seconds=overhead,
         modeled_total_seconds=None,
@@ -614,6 +786,41 @@ def _check_parallelizable(workloads: Sequence, strategies: Sequence) -> None:
                 "('name' or 'name@interval'), not instances")
 
 
+def _validate_sweep_specs(workloads: Sequence, strategies: Sequence) -> None:
+    """Fail a typo'd matrix up front in the parent — with the registered
+    names and a closest-match suggestion — instead of a bare KeyError
+    surfacing from (possibly) a worker process mid-sweep."""
+    for wl_spec in workloads:
+        if isinstance(wl_spec, Workload):
+            continue
+        name = wl_spec if isinstance(wl_spec, str) else wl_spec[0]
+        if name not in WORKLOADS:
+            raise unknown_name_error("workload", name, WORKLOADS)
+    for strat_spec in strategies:
+        if isinstance(strat_spec, ConsistencyStrategy):
+            continue
+        name = str(strat_spec).partition("@")[0]
+        if name not in STRATEGIES:
+            raise unknown_name_error("strategy", name, STRATEGIES)
+
+
+def _degrade_job(job, reason: str):
+    """Graceful-degradation hook for sharded sweeps: step a failed
+    shard's evaluation mode down the cost/fragility ladder
+    batched -> measure -> full. The batched evaluator leans on the jax
+    runtime (the likeliest component to die or wedge in a worker);
+    measure leans on per-cell snapshots; full is the plain rerun-style
+    execution path. All three agree on every deterministic field, so a
+    degraded shard changes how cells are computed, never what they say.
+    """
+    wl_spec, strat_spec, plans, cfg, engine, mode = job
+    step_down = {"batched": "measure", "measure": "full"}
+    nxt = step_down.get(mode)
+    if nxt is None:
+        return None
+    return (wl_spec, strat_spec, plans, cfg, engine, nxt)
+
+
 def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           strategies: Sequence = ("none", "adcc", "undo_log",
                                   "checkpoint_hdd", "checkpoint_nvm",
@@ -624,7 +831,11 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           progress=None,
           engine: str = "fork",
           mode: str = "full",
-          workers: int = 1) -> List[ScenarioResult]:
+          workers: int = 1,
+          shard_timeout: Optional[float] = None,
+          shard_retries: int = 2,
+          journal: Optional[str] = None,
+          chaos: Optional[Dict[int, str]] = None) -> List[ScenarioResult]:
     """Run the full workloads × strategies × crash-plans matrix.
 
     All plans of a (workload, strategy) pair are grounded against one
@@ -652,11 +863,24 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     measure evaluation, so batched mode is always safe to request.
 
     ``workers=N`` shards the (workload, strategy) pairs across N
-    processes (pairs are independent; snapshots are per-emulator) and
-    merges results in deterministic pair-major order, so the cell list
-    is identical to ``workers=1`` regardless of completion order.
-    Requires picklable registry specs. ``progress`` then fires per pair
-    (in merge order) instead of per cell.
+    supervised processes (pairs are independent; snapshots are
+    per-emulator) and merges results in deterministic pair-major order,
+    so the cell list is identical to ``workers=1`` regardless of
+    completion order. Requires picklable registry specs. ``progress``
+    then fires per pair (in merge order) instead of per cell.
+
+    Sharded sweeps self-heal (:mod:`repro.scenarios.pool`): each shard
+    gets a wall-clock deadline (``shard_timeout`` seconds, default from
+    ``REPRO_SWEEP_SHARD_TIMEOUT`` or 600), a worker that dies or hangs
+    is re-dispatched with exponential backoff up to ``shard_retries``
+    times, and a shard that keeps failing degrades its evaluation mode
+    batched -> measure -> full before the sweep gives up.
+    ``journal=<path>`` appends each completed shard to a jsonl journal
+    so an interrupted sweep resumed with the same arguments re-executes
+    only the missing shards (the journal is deleted on success).
+    ``chaos={shard_index: "kill"|"hang"}`` injects a failure into that
+    shard's first attempt — the hook the chaos gate uses to prove the
+    healing loop, never set in production sweeps.
 
     ``out_json`` writes the ``BENCH_scenarios.json`` artifact:
     ``{"schema": ..., "cells": [<ScenarioResult>...], "skipped": [...]}``.
@@ -677,6 +901,7 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
                          "are evaluated from fork snapshots")
     if workers < 1:
         raise ValueError("workers must be >= 1")
+    _validate_sweep_specs(workloads, strategies)
 
     pairs = [(wl_spec, strat_spec)
              for wl_spec in workloads for strat_spec in strategies]
@@ -689,6 +914,8 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
         _check_parallelizable(workloads, strategies)
     if workers > 1 and len(pairs) > 1:
         import multiprocessing as mp
+
+        from .pool import run_sharded
         start = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
         if mode == "batched":
             from ..core.backends.batched import jax_runtime_live
@@ -698,17 +925,22 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
             # a serial batched sweep followed by a sharded one
             if jax_runtime_live():
                 start = "spawn"
-        ctx = mp.get_context(start)
+        if shard_timeout is None:
+            shard_timeout = float(
+                os.environ.get("REPRO_SWEEP_SHARD_TIMEOUT", "600"))
         jobs = [(w, s, tuple(plans), cfg, engine, mode) for w, s in pairs]
-        with ctx.Pool(processes=min(workers, len(jobs))) as pool:
-            # imap preserves submission order: the merge is pair-major
-            # and deterministic no matter which worker finishes first
-            for pair_results, pair_skipped in pool.imap(_run_pair_job, jobs):
-                results.extend(pair_results)
-                skipped.extend(pair_skipped)
-                if progress is not None:
-                    for res in pair_results:
-                        progress(res)
+        # the merge is job-major (= pair-major) and deterministic no
+        # matter which worker finishes first or how often one is healed
+        for pair_results, pair_skipped in run_sharded(
+                jobs, _run_pair_job, min(workers, len(jobs)),
+                timeout=shard_timeout, retries=shard_retries,
+                journal=journal, chaos=chaos, degrade=_degrade_job,
+                start_method=start):
+            results.extend(pair_results)
+            skipped.extend(pair_skipped)
+            if progress is not None:
+                for res in pair_results:
+                    progress(res)
     else:
         for wl_spec, strat_spec in pairs:
             pair_results, pair_skipped = _sweep_pair(

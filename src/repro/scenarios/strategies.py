@@ -34,7 +34,7 @@ from ..core.checkpoint_baseline import CheckpointBaseline
 from ..core.nvm import NVMConfig
 from ..core.transactions import TxManager
 from . import costmodel
-from .workloads import RecoveryResult, Workload
+from .workloads import RecoveryResult, Workload, unknown_name_error
 
 __all__ = [
     "ConsistencyStrategy",
@@ -411,7 +411,6 @@ def make_strategy(spec) -> ConsistencyStrategy:
         return spec
     name, _, interval = str(spec).partition("@")
     if name not in STRATEGIES:
-        raise KeyError(f"unknown strategy {name!r} "
-                       f"(registered: {strategy_names()})")
+        raise unknown_name_error("strategy", name, STRATEGIES)
     return STRATEGIES[name](interval=int(interval)) if interval \
         else STRATEGIES[name]()

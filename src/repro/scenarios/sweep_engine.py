@@ -32,27 +32,12 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from .crashplan import CrashPlan, CrashPoint
-from .driver import ScenarioResult, _finish, _measure
+from .driver import ScenarioResult, _digests_equal, _finish, _measure
 from .strategies import ConsistencyStrategy
 from .workloads import Workload
 
 __all__ = ["run_pair_forked"]
-
-
-def _digests_equal(a, b) -> bool:
-    if set(a) != set(b):
-        return False
-    for k, va in a.items():
-        vb = b[k]
-        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
-            if not np.array_equal(np.asarray(va), np.asarray(vb)):
-                return False
-        elif va != vb:
-            return False
-    return True
 
 
 class _CellSnapshot:
@@ -115,6 +100,11 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
     snaps: Dict[Tuple[Optional[int], bool], _CellSnapshot] = {}
     wall: List[float] = []
     modeled: List[float] = []
+    if ladder:
+        # pre-step-0 snapshot: the golden state a scratch restart
+        # (restart_point == -1) must reproduce — certifies that
+        # ``Workload.reset()`` actually restores initial-state fidelity
+        snaps[(-1, False)] = _CellSnapshot(wl, strat, 0.0, 0.0)
     for i in range(n):
         ts = time.perf_counter()
         m0 = emu.modeled_seconds()
@@ -144,8 +134,10 @@ def run_pair_forked(wl: Workload, strat: ConsistencyStrategy,
         the golden-prefix digest at the restart point. May leave ``wl``
         restored to the golden state — callers restore per cell."""
         r = rec.restart_point
-        if r is None or r < 0:
-            return None          # scratch restarts have no golden step
+        if r is None:
+            return None
+        if r < 0:
+            r = -1               # scratch: certify against pre-step-0
         golden_snap = snaps.get((r, False))
         if golden_snap is None:
             return None

@@ -46,7 +46,25 @@ __all__ = [
     "WORKLOADS",
     "register_workload",
     "make_workload",
+    "unknown_name_error",
 ]
+
+
+def unknown_name_error(kind: str, name: str,
+                       registered) -> ValueError:
+    """Uniform unknown-registry-name error: lists every registered name
+    (sorted) and suggests the closest match. Shared by the workload,
+    strategy, and sweep-argument validators so a typo'd spec fails the
+    same way everywhere — with enough context to fix it — instead of a
+    bare KeyError deep inside a worker process."""
+    import difflib
+
+    names = sorted(registered)
+    msg = f"unknown {kind} {name!r} (registered: {names})"
+    close = difflib.get_close_matches(str(name), names, n=1)
+    if close:
+        msg += f"; did you mean {close[0]!r}?"
+    return ValueError(msg)
 
 
 @dataclasses.dataclass
@@ -739,6 +757,5 @@ def make_workload(spec) -> Workload:
     else:
         name, kwargs = spec
     if name not in WORKLOADS:
-        raise KeyError(f"unknown workload {name!r} "
-                       f"(registered: {sorted(WORKLOADS)})")
+        raise unknown_name_error("workload", name, WORKLOADS)
     return WORKLOADS[name](**dict(kwargs))

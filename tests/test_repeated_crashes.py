@@ -1,0 +1,146 @@
+"""Repeated-crash endurance: crash → recover → run on → crash AGAIN →
+recover → finish, on every registered strategy under both emulation
+backends. No nested faults here — these are back-to-back *independent*
+crashes, the sequence a flaky power rail actually delivers, and the
+recovery path must survive being exercised twice in one lifetime
+(recovery state fully re-arms: checkpoints keep being taken, the undo
+log keeps logging, shadow copies keep flipping).
+
+Complements tests/test_fault_injection.py (which re-crashes *inside*
+recovery): here each recovery completes, and what is being proven is
+that a recovered run is a first-class run — not a degraded epilogue.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.nvm import NVMConfig
+from repro.scenarios import STRATEGIES, make_strategy, make_workload
+
+CG = ("cg", {"n": 1024, "iters": 8, "seed": 3})
+MM = ("mm", {"n": 64, "k": 16, "seed": 1})
+XS = ("xsbench", {"lookups": 600, "grid_points": 800, "n_nuclides": 8,
+                  "n_materials": 6, "max_nuclides_per_material": 4,
+                  "flush_every_frac": 0.02, "seed": 7})
+KV = ("kv", {"profile": "etc", "n_steps": 24, "seed": 11})
+
+
+@pytest.fixture(params=["reference", "vectorized"], autouse=True)
+def nvm_backend(request, monkeypatch):
+    monkeypatch.setenv("REPRO_NVM_BACKEND", request.param)
+    return request.param
+
+
+def _cfg():
+    # constructed AFTER the backend fixture set the environment
+    return NVMConfig(cache_bytes=512 * 1024)
+
+
+def run_with_crashes(wl_spec, strategy, crash_steps, torn_last=False):
+    """Drive a workload the way the scenario driver does, crashing at
+    each step in ``crash_steps`` (boundary crashes; the last one torn
+    mid-step when ``torn_last``), recovering in place each time, and
+    finishing the run. Returns (final report, recovery results)."""
+    wl = make_workload(wl_spec)
+    strat = make_strategy(strategy)
+    wl.setup(_cfg(), "adcc" if strat.wants_adcc else "plain")
+    strat.attach(wl)
+    pending = sorted(crash_steps)
+    recs = []
+    i = 0
+    while i < wl.n_steps:
+        strat.before_step(i)
+        wl.step(i)
+        torn = torn_last and pending == [i]
+        if not torn:
+            strat.after_step(i)
+        if pending and pending[0] == i:
+            pending.pop(0)
+            wl.emu.crash()
+            rec = strat.recover(i, torn)
+            recs.append(rec)
+            i = rec.resume_step
+        else:
+            i += 1
+    return wl.finalize(), recs
+
+
+ALL_STRATEGIES = sorted(STRATEGIES)
+
+
+class TestDoubleCrash:
+    @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+    def test_cg_two_crashes_correct(self, strategy):
+        report, recs = run_with_crashes(CG, strategy, [3, 6])
+        assert report.correct, (strategy, report.metrics)
+        assert len(recs) == 2
+        # the second recovery is a fresh recovery, not a replay of the
+        # first: its restart point tracks the later crash
+        if recs[1].restart_point >= 0:
+            assert recs[1].restart_point >= recs[0].restart_point
+
+    @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+    def test_cg_immediate_recrash_correct(self, strategy):
+        # the second crash lands on the very first step the first
+        # recovery replays — recovery state must have fully re-armed
+        report, recs = run_with_crashes(CG, strategy, [4, 5])
+        assert report.correct, (strategy, report.metrics)
+        assert len(recs) == 2
+
+    @pytest.mark.parametrize("strategy", ["adcc", "undo_log",
+                                          "checkpoint_nvm",
+                                          "shadow_snapshot"])
+    def test_mm_two_crashes_correct(self, strategy):
+        report, _ = run_with_crashes(MM, strategy, [2, 7])
+        assert report.correct, (strategy, report.metrics)
+
+    @pytest.mark.parametrize("strategy", ["adcc", "undo_log",
+                                          "checkpoint_nvm",
+                                          "shadow_snapshot"])
+    def test_xs_two_crashes_correct(self, strategy):
+        report, _ = run_with_crashes(XS, strategy, [3, 9])
+        assert report.correct, (strategy, report.metrics)
+
+    @pytest.mark.parametrize("strategy", ["adcc", "shadow_snapshot"])
+    def test_kv_two_crashes_correct(self, strategy):
+        report, _ = run_with_crashes(KV, strategy, [5, 12])
+        assert report.correct, (strategy, report.metrics)
+
+
+class TestTornThenCrashAgain:
+    @pytest.mark.parametrize("strategy", ["adcc", "undo_log",
+                                          "checkpoint_nvm",
+                                          "shadow_snapshot"])
+    def test_cg_boundary_then_torn_crash(self, strategy):
+        # first crash at a clean step boundary, second one torn
+        # mid-step: the second recovery sees in-flight state created by
+        # a run that had already been recovered once
+        report, recs = run_with_crashes(CG, strategy, [2, 6],
+                                        torn_last=True)
+        assert report.correct, (strategy, report.metrics)
+        assert len(recs) == 2
+
+
+class TestDoubleCrashBeforeRecovery:
+    def test_undo_log_crash_again_before_rollback(self):
+        """Power fails, and fails AGAIN before rollback even starts
+        (two crashes, one recovery). The undo log must still roll the
+        transaction back from the twice-crashed image."""
+        wl = make_workload(CG)
+        strat = make_strategy("undo_log")
+        wl.setup(_cfg(), "plain")
+        strat.attach(wl)
+        for i in range(5):
+            strat.before_step(i)
+            wl.step(i)
+            if i < 4:
+                strat.after_step(i)
+        wl.emu.crash()
+        wl.emu.crash()           # second failure before any recovery ran
+        rec = strat.recover(4, True)
+        for j in range(rec.resume_step, wl.n_steps):
+            strat.before_step(j)
+            wl.step(j)
+            strat.after_step(j)
+        report = wl.finalize()
+        assert report.correct, report.metrics

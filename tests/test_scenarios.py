@@ -108,10 +108,16 @@ class TestRegistries:
         assert make_strategy("adcc").interval == 1
 
     def test_unknown_names_raise(self):
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError, match=r"unknown strategy 'paxos'"):
             make_strategy("paxos")
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError, match=r"unknown workload 'hpcg'"):
             make_workload("hpcg")
+
+    def test_unknown_names_suggest_closest(self):
+        with pytest.raises(ValueError, match=r"did you mean 'undo_log'"):
+            make_strategy("undolog")
+        with pytest.raises(ValueError, match=r"did you mean 'xsbench'"):
+            make_workload("xsbnech")
 
 
 class TestStrategyEquivalence:

@@ -1,0 +1,178 @@
+"""Tests for the self-healing shard pool (repro.scenarios.pool):
+ordered results, chaos-injected kill/hang healing, error semantics
+(real exceptions skip the retry ladder), graceful degradation, journal
+resume (only missing shards re-execute), and lock hygiene.
+"""
+
+import multiprocessing
+import os
+import time
+
+import pytest
+
+from repro.scenarios.pool import ShardFailure, job_fingerprint, run_sharded
+
+
+def square(job):
+    return job * job
+
+
+def marking_square(job):
+    """job = (value, marker_dir, fail_flag_dir) — drops a 'ran-<value>'
+    marker so the parent can observe which shards actually executed,
+    and fails on value 3 unless the 'allow' flag file exists."""
+    value, marker_dir, flag_dir = job
+    with open(os.path.join(marker_dir, f"ran-{value}"), "w"):
+        pass
+    if value == 3 and not os.path.exists(os.path.join(flag_dir, "allow")):
+        raise ValueError("shard 3 not allowed yet")
+    return value * value
+
+
+def failing_worker(job):
+    if job >= 0:
+        raise ValueError(f"boom on {job}")
+    return job * job
+
+
+class TestBasics:
+    def test_results_in_job_order(self):
+        jobs = list(range(8))
+        assert run_sharded(jobs, square, 3) == [j * j for j in jobs]
+
+    def test_single_worker(self):
+        assert run_sharded([1, 2, 3], square, 1) == [1, 4, 9]
+
+    def test_workers_validation(self):
+        with pytest.raises(ValueError):
+            run_sharded([1], square, 0)
+
+    def test_fingerprint_is_stable_and_job_sensitive(self):
+        assert job_fingerprint((1, "a")) == job_fingerprint((1, "a"))
+        assert job_fingerprint((1, "a")) != job_fingerprint((2, "a"))
+
+
+class TestChaosHealing:
+    def test_killed_shard_is_retried(self):
+        events = []
+        got = run_sharded(list(range(6)), square, 2, chaos={0: "kill"},
+                          retries=2, backoff=0.01,
+                          progress_cb=events.append)
+        assert got == [j * j for j in range(6)]
+        assert any(e["event"] == "retry" and e["job"] == 0
+                   and e["reason"] == "died" for e in events)
+
+    def test_hung_shard_times_out_and_retries(self):
+        events = []
+        got = run_sharded(list(range(4)), square, 2, chaos={1: "hang"},
+                          timeout=1.0, retries=2, backoff=0.01,
+                          progress_cb=events.append)
+        assert got == [j * j for j in range(4)]
+        assert any(e["event"] == "retry" and e["job"] == 1
+                   and e["reason"] == "timeout" for e in events)
+
+    def test_chaos_injected_only_on_first_attempt(self):
+        # kill + hang on the same sweep, one worker slot: both heal
+        got = run_sharded([5, 6], square, 1, chaos={0: "kill", 1: "hang"},
+                          timeout=1.0, retries=1, backoff=0.01)
+        assert got == [25, 36]
+
+
+class TestErrorsAndDegradation:
+    def test_worker_exception_skips_retry_ladder(self):
+        events = []
+        with pytest.raises(ShardFailure) as exc:
+            run_sharded([7], failing_worker, 1, retries=3, backoff=0.01,
+                        progress_cb=events.append)
+        assert exc.value.reason == "error"
+        assert "boom on 7" in exc.value.detail
+        # a deterministic exception is never retried — re-running
+        # identical code on an identical job only re-raises
+        assert not any(e["event"] == "retry" for e in events)
+
+    def test_degrade_maps_job_to_fallback(self):
+        events = []
+        got = run_sharded([4, -2], failing_worker, 2, retries=0,
+                          backoff=0.01, degrade=lambda job, reason: -job,
+                          progress_cb=events.append)
+        assert got == [16, 4]        # shard 0 ran as its degraded twin
+        assert any(e["event"] == "degrade" and e["job"] == 0
+                   for e in events)
+
+    def test_degrade_exhausted_raises(self):
+        with pytest.raises(ShardFailure):
+            run_sharded([4], failing_worker, 1, retries=0,
+                        degrade=lambda job, reason: None)
+
+    def test_no_child_processes_survive_failure(self):
+        with pytest.raises(ShardFailure):
+            run_sharded([1], failing_worker, 1, retries=0)
+        deadline = time.monotonic() + 5.0
+        while multiprocessing.active_children():
+            assert time.monotonic() < deadline, "orphaned shard children"
+            time.sleep(0.05)
+
+
+class TestJournalResume:
+    def _jobs(self, tmp_path):
+        return [(i, str(tmp_path), str(tmp_path)) for i in range(4)]
+
+    def test_resume_reexecutes_only_missing_shards(self, tmp_path):
+        journal = str(tmp_path / "sweep.jsonl")
+        jobs = self._jobs(tmp_path)
+        with pytest.raises(ShardFailure):
+            run_sharded(jobs, marking_square, 2, retries=0,
+                        journal=journal)
+        assert os.path.exists(journal)           # partial progress kept
+        assert not os.path.exists(journal + ".lock")   # lock released
+        ran_first = {f for f in os.listdir(str(tmp_path))
+                     if f.startswith("ran-")}
+        assert ran_first == {"ran-0", "ran-1", "ran-2", "ran-3"}
+
+        for f in ran_first:
+            os.unlink(str(tmp_path / f))
+        with open(str(tmp_path / "allow"), "w"):
+            pass
+        events = []
+        got = run_sharded(jobs, marking_square, 2, retries=0,
+                          journal=journal, progress_cb=events.append)
+        assert got == [0, 1, 4, 9]
+        # shards 0-2 came from the journal; only shard 3 re-executed
+        ran_second = {f for f in os.listdir(str(tmp_path))
+                      if f.startswith("ran-")}
+        assert ran_second == {"ran-3"}
+        assert sorted(e["job"] for e in events
+                      if e["event"] == "resumed") == [0, 1, 2]
+        assert not os.path.exists(journal)       # consumed on success
+
+    def test_changed_job_invalidates_its_entry_only(self, tmp_path):
+        journal = str(tmp_path / "sweep.jsonl")
+        jobs = list(range(3))
+        assert run_sharded(jobs, square, 2, journal=journal) == [0, 1, 4]
+        # journal was deleted on success: a fresh run re-executes all
+        assert run_sharded([0, 1, 5], square, 2, journal=journal) \
+            == [0, 1, 25]
+
+    def test_live_lock_owner_blocks(self, tmp_path):
+        proc = multiprocessing.Process(target=time.sleep, args=(30,))
+        proc.start()
+        journal = str(tmp_path / "sweep.jsonl")
+        try:
+            with open(journal + ".lock", "w") as fh:
+                fh.write(str(proc.pid))          # someone else, alive
+            with pytest.raises(RuntimeError, match="locked by live pid"):
+                run_sharded([1], square, 1, journal=journal)
+        finally:
+            proc.terminate()
+            proc.join()
+            os.unlink(journal + ".lock")
+
+    def test_stale_lock_from_dead_owner_is_taken_over(self, tmp_path):
+        proc = multiprocessing.Process(target=lambda: None)
+        proc.start()
+        proc.join()                              # a provably dead pid
+        journal = str(tmp_path / "sweep.jsonl")
+        with open(journal + ".lock", "w") as fh:
+            fh.write(str(proc.pid))
+        assert run_sharded([2], square, 1, journal=journal) == [4]
+        assert not os.path.exists(journal + ".lock")

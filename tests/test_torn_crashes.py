@@ -466,9 +466,12 @@ class TestStateCertified:
                      and c.restart_point >= 0]
         assert certified, "expected checkpointed restarts"
         assert all(c.state_certified is True for c in certified)
-        # scratch restarts have no golden step to certify against
+        # scratch restarts certify against the pre-step-0 snapshot
+        assert all(c.state_certified is True for c in cells
+                   if c.restart_point is not None and c.restart_point < 0)
+        # only uncrashed cells have nothing to certify
         assert all(c.state_certified is None for c in cells
-                   if c.restart_point is None or c.restart_point < 0)
+                   if c.restart_point is None)
 
     def test_corrupt_recovery_fails_certification(self):
         cells = sweep(workloads=(XS,), strategies=("adcc",),
