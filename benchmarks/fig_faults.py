@@ -13,12 +13,14 @@ real NVM deployment adds on top:
   means the retried recovery provably landed on the same state
   (re-entrancy, proven not assumed); ``recovery_diverged`` means the
   mid-recovery crash changed the outcome — the crash-unsafe-recovery
-  class WITCHER hunts. The figure's standing finding: ABFT-MM's ADCC
-  recovery *diverges* (it re-executes compute chunks and advances its
-  progress counter mid-recovery, so a second crash strands progress
-  the data doesn't back), while the wholesale mechanisms' rollback /
-  restore paths are idempotent by construction — which is what the
-  coverage-floor gate pins.
+  class WITCHER hunts. ABFT-MM's ADCC recovery used to *diverge* here
+  (it re-executed compute chunks while advancing its progress counter
+  mid-recovery, so a second crash stranded progress the data didn't
+  back); recovery now replays chunks with the counter pinned at its
+  crash-time value, so MM-adcc joins the wholesale mechanisms'
+  rollback / restore paths under the zero-``recovery_diverged``
+  coverage-floor gate (the old pinned-diverged finding, flipped —
+  not deleted).
 
 * **silent media faults** — a seeded poisoned-line/bit-flip injector
   (``FaultSpec(poison_words=w)``) corrupts the post-crash image with
@@ -31,9 +33,11 @@ real NVM deployment adds on top:
   that algorithm knowledge doubles as an integrity check, made
   falsifiable. The wholesale mechanisms split as the taxonomy
   predicts: checkpoint/shadow restore *heals* poison wholesale
-  (harmless classes), the undo log detects only what its log spans
-  cover (``fault_silent`` elsewhere — the coverage hole the figure
-  exists to surface).
+  (harmless classes), and the undo log — whose commit-boundary cells
+  used to let poison on committed spans through silently (the old
+  pinned coverage hole) — now stamps a crc32 per committed span and
+  validates the post-crash image against them, so it rides the same
+  zero-``fault_silent`` floor on its covered spans.
 
 Campaign sweeps run ``mode="measure"`` under the full dense-gate stack
 (``run_dense_cross_checks``: sharded == serial cell-for-cell, every
@@ -181,20 +185,26 @@ def check_fault_gates(campaign: str, kw: Dict, cells, workers: int) -> None:
             raise AssertionError(
                 f"fault-campaign cell ran without the fault harness: {key}")
         if campaign == "nested":
-            if (_base(c.strategy) in WHOLESALE_BASES
+            # MM-adcc rides the same floor since its replay-pinned
+            # counter fix: the old pinned-diverged finding, flipped
+            if ((_base(c.strategy) in WHOLESALE_BASES
+                    or (_base(c.strategy) == "adcc" and c.workload == "mm"))
                     and c.correctness_class == "recovery_diverged"):
                 raise AssertionError(
-                    f"wholesale mechanism's recovery diverged under a "
-                    f"nested crash: {key}")
+                    f"recovery diverged under a nested crash (idempotence "
+                    f"floor): {key}")
         else:
             if int(c.info.get("fault_words_injected") or 0) == 0:
                 raise AssertionError(
                     f"poison cell injected zero words (mis-scoped "
                     f"poison_regions?): {key}")
-            if (_base(c.strategy) == "adcc"
+            # undo_log joined the zero-silent floor when commits began
+            # stamping per-span payload crc32s (the old coverage-hole
+            # pin, flipped): every campaign poison scope is tx-covered
+            if (_base(c.strategy) in ("adcc", "undo_log")
                     and c.correctness_class == "fault_silent"):
                 raise AssertionError(
-                    f"ADCC integrity machinery missed a poisoned-line "
+                    f"integrity machinery missed a poisoned-line "
                     f"fault on a covered region: {key}")
     if campaign == "nested":
         # the trap must actually fire somewhere for every strategy whose

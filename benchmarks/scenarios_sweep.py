@@ -18,9 +18,11 @@ under measure vs batched, plus a dense torn KV serving matrix timed in
 measure mode (the ``kv_cells_per_second`` trend metric), plus a dense
 fault-injection matrix — nested re-crash and poisoned-line plans —
 timed in measure mode (the ``fault_cells_per_second`` trend metric),
+plus a single-pair dense matrix point-sharded across workers (the
+``pointshard_speedup`` trend metric) and re-swept under a 1-byte
+snapshot budget in both tier policies (the ``snapshot_spill`` stats),
 emitted to ``BENCH_sweep.json`` (the batched section also standalone
-as ``BENCH_batched.json``), with six hard gates (CI relies on all of
-them):
+as ``BENCH_batched.json``), with the hard gates CI relies on:
 
   * fork vs rerun — identical deterministic payload cell-for-cell;
   * measure vs fork — every field a measure-mode cell emits equals the
@@ -33,7 +35,14 @@ them):
   * kv measure vs fork — every field the timed KV measure cells emit
     equals the full-execution cell;
   * fault measure vs fork — every field the timed fault-injection
-    measure cells emit equals the full-execution cell.
+    measure cells emit equals the full-execution cell;
+  * point-sharded vs serial — splitting ONE pair's crash points across
+    workers merges to the identical cell list (and, full-size on a
+    host with >= POINTSHARD_WORKERS usable CPUs, runs >= 2x faster);
+  * snapshot tiering — a budget that evicts every non-pinned snapshot
+    (spill-to-disk AND recompute-on-miss) still merges to the
+    unbudgeted cells exactly, with the tier counters proving the
+    eviction paths actually ran.
 """
 
 from __future__ import annotations
@@ -125,6 +134,26 @@ FAULT_TIMING_PLANS = (
     CrashPlan.at_every_step(fault=FaultSpec(poison_words=2, seed=14)),
 )
 
+# single-pair dense matrix for the point-sharding leg: ONE (workload,
+# strategy) pair, so workers>1 can only help by splitting the pair's
+# own crash points. Sized so per-cell restore + recover dominates the
+# per-shard golden-prefix replay and the process spawn — the regime
+# point-sharding exists for (the smoke size keeps CI fast; spawn
+# overhead dominates there, so only cell identity is gated at smoke).
+POINTSHARD_WORKLOAD = ("cg", {"n": 16384, "iters": 32, "seed": 9})
+SMOKE_POINTSHARD_WORKLOAD = ("cg", {"n": 1024, "iters": 24, "seed": 9})
+POINTSHARD_WORKERS = 4
+
+
+def _usable_cpus() -> int:
+    """CPUs this process may actually run on — the quantity that decides
+    whether the point-shard wall-clock floor is physically meaningful
+    (containers routinely expose 1 core to a many-core host)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:   # non-Linux
+        return os.cpu_count() or 1
+
 
 def default_workers() -> int:
     """Worker count for parallel sweeps: REPRO_SWEEP_WORKERS, default 2
@@ -210,7 +239,9 @@ def run_dense_cross_checks(kw: Dict, cells, workers: int):
 
 def check_dense_gates(kw: Dict, cells, workers: int,
                       strict_correct: bool = True,
-                      expected_incorrect: int = None) -> List[Dict]:
+                      expected_incorrect: int = None,
+                      tolerance_class=None,
+                      expected_tolerated: int = None):
     """The gates a dense measure-mode figure matrix (fig3/fig7) runs
     under at EVERY size: the sharded sweep must equal the serial one
     cell-for-cell, and every field a measure cell emits must match the
@@ -231,22 +262,40 @@ def check_dense_gates(kw: Dict, cells, workers: int,
     what catches recovery regressions the measure cells (correct=None)
     cannot — CI pays it at smoke sizes only; full runs pay seconds.
 
-    ``expected_incorrect`` pins the *exact* number of off-criterion
-    cells a non-strict run may produce: the known approximate-restart
-    population is a property of the seed algorithm, so any growth (or
-    shrinkage) is a behavior change that must be looked at, not
-    silently absorbed (the fig3 ``incorrect_full_cells`` gate)."""
+    ``tolerance_class`` is a documented reclassification predicate for
+    the approximate-restart population: an off-criterion full cell the
+    predicate accepts (e.g. its relative residual is within the ADCC
+    invariant-scan tolerance that *admitted* the restart candidate) is
+    counted as *tolerated*, not incorrect — the iterative-method
+    tolerance argument, made explicit per cell instead of absorbed into
+    a nonzero incorrect count. ``expected_tolerated`` pins that
+    population exactly, and ``expected_incorrect`` pins the *exact*
+    number of cells off the criterion AND outside the tolerance class a
+    non-strict run may produce — both pins exist so neither population
+    can silently grow (or shrink) under later changes (the fig3
+    ``incorrect_full_cells`` / ``approx_consistent_full_cells`` gates).
+    Returns ``(incorrect_keys, tolerated_keys)``."""
     full = run_dense_cross_checks(kw, cells, workers)
-    bad = [_cell_key(c) for c in full if not c.correct]
-    if bad and strict_correct:
+    off = [c for c in full if not c.correct]
+    tol = [c for c in off if tolerance_class is not None
+           and tolerance_class(c)]
+    bad = [_cell_key(c) for c in off if c not in tol]
+    tol_keys = [_cell_key(c) for c in tol]
+    if (bad or tol_keys) and strict_correct:
         raise AssertionError(
-            f"full-execution cells finalized INCORRECT: {bad[:5]}")
+            f"full-execution cells finalized INCORRECT: "
+            f"{(bad + tol_keys)[:5]}")
     if expected_incorrect is not None and len(bad) != expected_incorrect:
         raise AssertionError(
             f"incorrect full-execution cell count changed: got {len(bad)}, "
             f"pinned {expected_incorrect} — the approximate-restart "
             f"population moved; inspect before re-pinning: {bad[:5]}")
-    return bad
+    if expected_tolerated is not None and len(tol_keys) != expected_tolerated:
+        raise AssertionError(
+            f"tolerated (approx-consistent) full-execution cell count "
+            f"changed: got {len(tol_keys)}, pinned {expected_tolerated} — "
+            f"inspect before re-pinning: {tol_keys[:5]}")
+    return bad, tol_keys
 
 
 def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
@@ -332,8 +381,44 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
     fault_div = measure_divergences(fault_cells,
                                     sweep(engine="fork", **fkw))
 
+    # -- point-sharding, timed on a single-pair dense matrix --------------
+    # workers>1 used to serialize any sweep with a single (workload,
+    # strategy) pair; point-sharding splits that pair's grounded crash
+    # points across the workers instead. Pin the sharded cells to the
+    # serial ones and record the wall-clock ratio as its own trend
+    # metric. Point shards are CPU-bound, so the >=2x floor (run_timing)
+    # binds only full-size on a host with >= POINTSHARD_WORKERS usable
+    # CPUs — on an underprovisioned runner the shards timeshare one
+    # core and the recorded ratio documents the overhead instead of
+    # gating on parallelism the host cannot deliver.
+    ps_wl = SMOKE_POINTSHARD_WORKLOAD if smoke else POINTSHARD_WORKLOAD
+    ps_kw = dict(workloads=(ps_wl,), strategies=("adcc",),
+                 plans=TIMING_PLANS, cfg=cfg)
+    t0 = time.perf_counter()
+    ps_serial = sweep(mode="measure", workers=1, **ps_kw)
+    ps_serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ps_sharded = sweep(mode="measure", workers=POINTSHARD_WORKERS, **ps_kw)
+    ps_sharded_s = time.perf_counter() - t0
+    ps_div = full_divergences(ps_sharded, ps_serial)
+
+    # -- snapshot tiering, forced-eviction leg ----------------------------
+    # A 1-byte budget evicts every non-pinned ladder snapshot, so the
+    # spill sweep pays serialize + reload on every cell and the
+    # recompute sweep replays the golden prefix from the pre-step-0
+    # pin. Both must still merge to the unbudgeted cells exactly, and
+    # their tier counters prove the eviction paths actually ran (a
+    # budget so generous nothing spills would gate nothing).
+    tier_stats = {}
+    tier_div = []
+    for policy in ("spill", "recompute"):
+        tc = sweep(mode="measure", workers=1, snapshot_budget_bytes=1,
+                   snapshot_policy=policy, **ps_kw)
+        tier_div += full_divergences(tc, ps_serial)
+        tier_stats[policy] = tc[0].info["snapshot_tier"]
+
     return {
-        "schema": "repro.scenarios.sweep_timing/v3",
+        "schema": "repro.scenarios.sweep_timing/v4",
         "smoke": bool(smoke),
         "matrix": {
             "workloads": [[w, p] for w, p in workloads],
@@ -350,6 +435,22 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         "batched_speedup": torn_measure_s / max(torn_batched_s, 1e-12),
         "kv_cells_per_second": len(kv_cells) / max(kv_s, 1e-12),
         "fault_cells_per_second": len(fault_cells) / max(fault_s, 1e-12),
+        "pointshard_speedup": ps_serial_s / max(ps_sharded_s, 1e-12),
+        "pointshard": {
+            "matrix": "single-pair cg dense (no_crash + at_every_step)",
+            "workload": list(ps_wl),
+            "workers": POINTSHARD_WORKERS,
+            "usable_cpus": _usable_cpus(),
+            "cells": len(ps_sharded),
+            "serial_seconds": ps_serial_s,
+            "sharded_seconds": ps_sharded_s,
+            "divergences": ps_div,
+        },
+        "snapshot_spill": {
+            "budget_bytes": 1,
+            "policies": tier_stats,
+            "divergences": tier_div,
+        },
         "fault": {
             "matrix": "cg+xsbench dense (nested at_every_step + poison "
                       "at_every_step)",
@@ -398,6 +499,10 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
     n_bdiv = len(payload["batched"]["divergences"])
     n_kdiv = len(payload["kv"]["divergences"])
     n_fdiv = len(payload["fault"]["divergences"])
+    n_pdiv = len(payload["pointshard"]["divergences"])
+    n_tdiv = len(payload["snapshot_spill"]["divergences"])
+    spill = payload["snapshot_spill"]["policies"]["spill"]
+    recomp = payload["snapshot_spill"]["policies"]["recompute"]
     rows = [
         Row("sweep/cells", payload["cells"],
             f"plans={'+'.join(payload['matrix']['plans'])}"),
@@ -440,6 +545,18 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             "(nested + poison at_every_step)"),
         Row("sweep/fault_divergences", n_fdiv,
             "fault measure-mode fields unequal to fork cells (must be 0)"),
+        Row("sweep/pointshard_speedup", payload["pointshard_speedup"],
+            f"single-pair dense, workers={payload['pointshard']['workers']} "
+            f"vs serial (usable_cpus={payload['pointshard']['usable_cpus']})"),
+        Row("sweep/pointshard_divergences", n_pdiv,
+            "point-sharded vs serial cell mismatches (must be 0)"),
+        Row("sweep/snapshot_spills", spill["spills"],
+            f"forced by a 1-byte budget; reloads={spill['reloads']} "
+            f"spilled_bytes={spill['spilled_bytes']}"),
+        Row("sweep/snapshot_recomputes", recomp["recomputes"],
+            "recompute-on-miss cells replayed from the tier-0 pin"),
+        Row("sweep/snapshot_tier_divergences", n_tdiv,
+            "budgeted vs unbudgeted cell mismatches (must be 0)"),
     ]
     write_json(BENCH_SWEEP_JSON, payload)
     write_json(BENCH_BATCHED_JSON, {
@@ -479,6 +596,40 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             f"fault-injection measure-mode cells diverged from fork "
             f"cells on {n_fdiv} cells: {payload['fault']['divergences'][:3]} "
             f"(see {BENCH_SWEEP_JSON})")
+    if n_pdiv:
+        raise AssertionError(
+            f"point-sharded sweep diverged from the serial sweep on "
+            f"{n_pdiv} cells: {payload['pointshard']['divergences'][:3]} "
+            f"(see {BENCH_SWEEP_JSON})")
+    ps = payload["pointshard"]
+    if (not payload["smoke"] and ps["usable_cpus"] >= ps["workers"]
+            and payload["pointshard_speedup"] < 2.0):
+        # the wall-clock floor: full-size, on a host that actually has
+        # the cores, splitting one pair's crash points across workers
+        # must at least halve the sweep — anything less means the
+        # per-shard overheads (golden-prefix replay, spawn, merge) are
+        # eating the parallelism
+        raise AssertionError(
+            f"point-sharded sweep achieved only "
+            f"{payload['pointshard_speedup']:.2f}x over serial with "
+            f"{ps['workers']} workers on {ps['usable_cpus']} usable "
+            f"CPUs (floor: 2x; see {BENCH_SWEEP_JSON})")
+    if n_tdiv:
+        raise AssertionError(
+            f"budgeted snapshot-tier sweep diverged from the unbudgeted "
+            f"one on {n_tdiv} cells: "
+            f"{payload['snapshot_spill']['divergences'][:3]} "
+            f"(see {BENCH_SWEEP_JSON})")
+    if not (spill["spills"] and spill["reloads"]):
+        raise AssertionError(
+            f"spill-policy tier sweep evicted nothing under a 1-byte "
+            f"budget (spills={spill['spills']} reloads={spill['reloads']}) "
+            f"— the eviction path went unexercised")
+    if not recomp["recomputes"]:
+        raise AssertionError(
+            "recompute-policy tier sweep regenerated nothing under a "
+            f"1-byte budget (recomputes={recomp['recomputes']}) — the "
+            "recompute-on-miss path went unexercised")
     return rows
 
 

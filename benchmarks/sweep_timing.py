@@ -4,10 +4,13 @@ Times a dense one-crash-point-per-step matrix (3 workloads × 3
 strategies × (no_crash + at_every_step)) under the rerun engine, the
 fork engine, fork + mode="measure", and a pair-sharded parallel measure
 run, plus the fig_torn dense torn matrix under measure vs
-fork+mode="batched"; writes ``BENCH_sweep.json`` (and the standalone
-``BENCH_batched.json``) with per-run seconds + speedups, and fails on
-any of the four divergence gates (fork/rerun, measure/fork,
-workers>1/workers=1, batched/measure).
+fork+mode="batched", plus a single-pair dense matrix point-sharded
+across 4 workers and re-swept under a 1-byte snapshot budget (spill
+and recompute tier policies); writes ``BENCH_sweep.json`` (and the
+standalone ``BENCH_batched.json``) with per-run seconds + speedups,
+and fails on any divergence gate (fork/rerun, measure/fork,
+workers>1/workers=1, batched/measure, point-sharded/serial,
+budgeted/unbudgeted) or an unexercised tier-eviction path.
 
     PYTHONPATH=src python -m benchmarks.sweep_timing            # full
     PYTHONPATH=src python -m benchmarks.sweep_timing --smoke    # CI

@@ -27,18 +27,21 @@ import sys
 from typing import Dict, List
 
 # the trend columns BENCH_sweep.json has carried since schema v2;
-# batched_speedup, kv_cells_per_second, and fault_cells_per_second
-# arrived later, so compare_speedups tolerates baselines that predate
-# any one metric (prev-missing is skipped, new-missing is a
-# schema-drift failure). The *_cells_per_second columns are absolute
-# throughputs rather than ratios, but the baseline comes from the same
-# runner class and the 2x window absorbs host noise — what they catch
-# is the KV restore/recover/audit path (kv_) or the fault harness's
-# golden + retried-recovery path (fault_) slipping from O(touched
-# lines) to O(store footprint).
+# batched_speedup, kv_cells_per_second, fault_cells_per_second, and
+# pointshard_speedup arrived later, so compare_speedups tolerates
+# baselines that predate any one metric (prev-missing is skipped,
+# new-missing is a schema-drift failure). The *_cells_per_second
+# columns are absolute throughputs rather than ratios, but the
+# baseline comes from the same runner class and the 2x window absorbs
+# host noise — what they catch is the KV restore/recover/audit path
+# (kv_) or the fault harness's golden + retried-recovery path (fault_)
+# slipping from O(touched lines) to O(store footprint).
+# pointshard_speedup is a ratio like the others but additionally
+# depends on the runner's core count; same-runner-class baselines keep
+# it comparable, and the 2x window absorbs scheduler noise.
 TREND_METRICS = ("speedup", "measure_speedup", "total_speedup",
                  "batched_speedup", "kv_cells_per_second",
-                 "fault_cells_per_second")
+                 "fault_cells_per_second", "pointshard_speedup")
 
 
 def load_artifact(path: str):

@@ -82,10 +82,14 @@ class ABFTMatmul:
             r0 = self.row_blocks[-1][1]
 
     # -- the two loops ------------------------------------------------------
-    def _loop1_chunk(self, s: int) -> None:
+    def _loop1_chunk(self, s: int, replay: bool = False) -> None:
         """C_s_temp = Ac[:, s*k:(s+1)*k] @ Br[s*k:(s+1)*k, :] + flush its
-        checksum row and column."""
-        self.counter.set(s)  # which chunk we are in (one line flush)
+        checksum row and column. ``replay=True`` (recovery re-execution)
+        must not advance the persisted progress counter: a nested crash
+        mid-recovery would otherwise strand the counter past chunks whose
+        data never persisted, shrinking the next attempt's scan range."""
+        if not replay:
+            self.counter.set(s)  # which chunk we are in (one line flush)
         k, n = self.k, self.n
         self.emu.read("Ac", 0, self.Ac.size)                 # stream inputs
         self.emu.read("Br", s * k * (n + 1), (s + 1) * k * (n + 1))
@@ -100,9 +104,12 @@ class ABFTMatmul:
             for i in range(lo, min(hi, n)):
                 reg.flush((i, slice(n, n + 1)))
 
-    def _loop2_block(self, bi: int) -> None:
-        """C_temp[rows] = sum_s C_s[rows]; flush the block's row checksums."""
-        self.counter.set(self.nchunks + bi)
+    def _loop2_block(self, bi: int, replay: bool = False) -> None:
+        """C_temp[rows] = sum_s C_s[rows]; flush the block's row checksums.
+        ``replay=True``: see ``_loop1_chunk`` — recovery re-execution keeps
+        the progress counter pinned at its crash-time value."""
+        if not replay:
+            self.counter.set(self.nchunks + bi)
         lo, hi = self.row_blocks[bi]
         acc = np.zeros((hi - lo, self.n + 1))
         for s in range(self.nchunks):

@@ -86,12 +86,23 @@ class UndoLogTx:
         self.snapshot(region, index)
         region[index] = value
 
-    def commit(self) -> None:
-        """Flush every region touched in the tx, then drop the log."""
+    def commit(self) -> Dict[Tuple[str, int, int], int]:
+        """Flush every region touched in the tx, then drop the log.
+
+        Returns a crc32 per committed span, computed over the truth
+        bytes the flush just persisted — the payload checksum recovery
+        validates against the post-crash image so a media fault on a
+        log-covered span cannot sail through silently (libpmemobj
+        stamps committed object payloads the same way)."""
+        crcs: Dict[Tuple[str, int, int], int] = {}
         for name, lo, hi, _old, _crc in self._log:
             self._emu.flush(name, lo, hi)
+            span = self._emu.truth_flat(name)[lo:hi]
+            crcs[(name, lo, hi)] = zlib.crc32(
+                np.ascontiguousarray(span).tobytes())
         self._log.clear()
         self.committed = True
+        return crcs
 
     def validate_log(self) -> int:
         """Index of the first invalid entry (== len(log) when the whole
@@ -159,10 +170,11 @@ class TxManager:
         self.open_tx = tx
         return tx
 
-    def commit(self) -> None:
+    def commit(self) -> Dict[Tuple[str, int, int], int]:
         assert self.open_tx is not None
-        self.open_tx.commit()
+        crcs = self.open_tx.commit()
         self.open_tx = None
+        return crcs
 
     def recover(self) -> Optional[RollbackReport]:
         """Post-crash: roll back the open transaction, if any. Returns

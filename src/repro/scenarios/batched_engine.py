@@ -70,7 +70,7 @@ from .strategies import (AdccStrategy, CheckpointHddStrategy,
                          CheckpointNvmDramStrategy, CheckpointStrategy,
                          ConsistencyStrategy, NativeStrategy,
                          UndoLogStrategy)
-from .sweep_engine import _CellSnapshot
+from .sweep_engine import SnapshotTier, _CellSnapshot, _make_regen
 from .workloads import (CGWorkload, MMWorkload, RecoveryResult, Workload,
                         XSBenchWorkload)
 
@@ -153,19 +153,29 @@ class _CrashImage:
 
 
 class _BatchedCell:
-    """One crashed cell queued for analytic evaluation."""
+    """One crashed cell queued for analytic evaluation.
 
-    __slots__ = ("plan_desc", "point", "snap", "spans", "torn_bytes", "rec")
+    Holds a snapshot *handle* (a zero-argument fetch), not the snapshot
+    itself: under a snapshot tier the payload may be spilled or dropped
+    between capture and evaluation, and the handle re-materializes it
+    on access instead of keeping a reference that defeats eviction."""
+
+    __slots__ = ("plan_desc", "point", "_snap_get", "spans", "torn_bytes",
+                 "rec")
 
     def __init__(self, plan_desc: str, point: CrashPoint,
-                 snap: _CellSnapshot, order: Sequence[Tuple[str, int]],
+                 snap_get, order: Sequence[Tuple[str, int]],
                  geometry: Dict[str, Tuple[int, int, int]]):
         self.plan_desc = plan_desc
         self.point = point
-        self.snap = snap
+        self._snap_get = snap_get
         self.spans, self.torn_bytes = _survivor_spans(
             point.survival, order, geometry)
         self.rec: Optional[RecoveryResult] = None
+
+    @property
+    def snap(self) -> _CellSnapshot:
+        return self._snap_get()
 
     def crash_image(self) -> _CrashImage:
         return _CrashImage(self.snap.wl_snap["emu"], self.spans)
@@ -628,11 +638,19 @@ def _assemble(wl: Workload, strat: ConsistencyStrategy, cell: _BatchedCell,
 
 def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
                      grounded: Sequence[Tuple[CrashPlan, List[CrashPoint]]],
-                     progress=None) -> List[ScenarioResult]:
+                     progress=None,
+                     snapshot_budget_bytes: Optional[int] = None,
+                     snapshot_policy: str = "spill") -> List[ScenarioResult]:
     """Evaluate every cell of one set-up (workload, strategy) pair in
     batched mode. Same contract as ``run_pair_forked(mode="measure")``
     minus ``state_certified``: ScenarioResults in plan-major,
-    point-minor order, deterministic fields identical cell-for-cell."""
+    point-minor order, deterministic fields identical cell-for-cell.
+
+    ``snapshot_budget_bytes``/``snapshot_policy`` run the snapshot set
+    under the same :class:`~repro.scenarios.sweep_engine.SnapshotTier`
+    as the fork engine; batched cells hold tier *handles*, so a
+    snapshot evicted between capture and analytic evaluation is
+    reloaded (or recomputed from the golden prefix) on access."""
     strat.attach(wl)
     emu = wl.emu
     n = wl.n_steps
@@ -649,6 +667,21 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
     need_full = (None, False) in want
     last_point = max((s for s, _ in want if s is not None), default=-1)
     snaps: Dict[Tuple[Optional[int], bool], _CellSnapshot] = {}
+    tier: Optional[SnapshotTier] = None
+    if snapshot_budget_bytes is not None:
+        tier = SnapshotTier(snapshot_budget_bytes, snapshot_policy)
+
+    def snap_put(key, snap: _CellSnapshot, pin: bool = False) -> None:
+        if tier is None:
+            snaps[key] = snap
+        else:
+            tier.put(key, snap, pin=pin)
+
+    def snap_get(key) -> Optional[_CellSnapshot]:
+        if tier is None:
+            return snaps.get(key)
+        return tier.get(key)
+
     ctxs: Dict[Tuple[int, bool], tuple] = {}
     wall: List[float] = []
     modeled: List[float] = []
@@ -659,6 +692,9 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
                     for name in {nm for nm, _ in order}}
         ctxs[key] = (order, geometry)
 
+    if tier is not None:
+        # pinned tier-0 root every recompute-on-miss can replay from
+        snap_put((-1, False), _CellSnapshot(wl, strat, 0.0, 0.0), pin=True)
     for i in range(n):
         ts = time.perf_counter()
         m0 = emu.modeled_seconds()
@@ -666,8 +702,8 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
         wl.step(i)
         if (i, True) in want:   # torn: before the persistence hook
             torn_wall = time.perf_counter() - ts
-            snaps[(i, True)] = _CellSnapshot(
-                wl, strat, torn_wall, emu.modeled_seconds() - m0)
+            snap_put((i, True), _CellSnapshot(
+                wl, strat, torn_wall, emu.modeled_seconds() - m0))
             capture_ctx((i, True))
             # keep capture cost out of the step's recorded duration
             ts = time.perf_counter() - torn_wall
@@ -675,13 +711,16 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
         wall.append(time.perf_counter() - ts)
         modeled.append(emu.modeled_seconds() - m0)
         if (i, False) in want:
-            snaps[(i, False)] = _CellSnapshot(wl, strat, wall[-1],
-                                              modeled[-1])
+            snap_put((i, False), _CellSnapshot(wl, strat, wall[-1],
+                                               modeled[-1]))
             capture_ctx((i, False))
         if not need_full and i == last_point:
             break
     if need_full:
-        snaps[(None, False)] = _CellSnapshot(wl, strat, 0.0, 0.0)
+        snap_put((None, False), _CellSnapshot(wl, strat, 0.0, 0.0),
+                 pin=True)
+    if tier is not None:
+        tier.set_regen(_make_regen(tier, wl, strat))
 
     # -- split cells: analytic batch vs full/fallback ---------------------
     evaluator = _make_evaluator(wl, strat)
@@ -704,7 +743,9 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
             else:
                 key = (point.step, point.torn)
                 order, geometry = ctxs[key]
-                cell = _BatchedCell(desc, point, snaps[key], order, geometry)
+                cell = _BatchedCell(desc, point,
+                                    lambda k=key: snap_get(k),
+                                    order, geometry)
                 pending.append(cell)
                 emit.append(("batched", desc, point, cell))
 
@@ -718,13 +759,13 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
     for kind, desc, point, cell in emit:
         t0 = time.perf_counter()
         if kind == "full":
-            snap = snaps[(None, False)]
+            snap = snap_get((None, False))
             snap.restore(wl, strat)
             res = _finish(wl, strat, point, desc, recover=True,
                           crashed=False, wall_durs=wall,
                           modeled_durs=modeled, t0=t0)
         elif kind == "fallback":
-            snap = snaps[(point.step, point.torn)]
+            snap = snap_get((point.step, point.torn))
             snap.restore(wl, strat)
             s = point.step
             res = _measure(wl, strat, point, desc,
@@ -735,4 +776,9 @@ def run_pair_batched(wl: Workload, strat: ConsistencyStrategy,
         results.append(res)
         if progress is not None:
             progress(res)
+    if tier is not None:
+        tier_info = tier.stats.to_dict()
+        for res in results:
+            res.info["snapshot_tier"] = tier_info
+        tier.close()
     return results

@@ -332,6 +332,7 @@ def classify_recovery(crashed: bool, crash_step: Optional[int],
         detected = bool(rec.info.get("torn_flagged")
                         or rec.info.get("state_corrupt")
                         or int(rec.info.get("log_entries_rejected") or 0) > 0
+                        or int(rec.info.get("payload_crc_mismatches") or 0) > 0
                         or int(rec.info.get("slots_dropped") or 0) > 0
                         or int(rec.info.get("corrected_elements") or 0) > 0)
         if detected:
@@ -712,13 +713,43 @@ DEFAULT_SWEEP_PLANS: Sequence[CrashPlan] = (
 )
 
 
+def _shard_grounded(grounded: List[Tuple[CrashPlan, List[CrashPoint]]],
+                    shard: Tuple[int, int]
+                    ) -> List[Tuple[CrashPlan, List[CrashPoint]]]:
+    """This shard's contiguous slice of the pair's grounded crash
+    points, flattened plan-major point-minor and regrouped by plan —
+    concatenating every shard's results in shard order reproduces the
+    serial cell list exactly."""
+    index, count = shard
+    flat = [(plan, point) for plan, points in grounded for point in points]
+    lo = index * len(flat) // count
+    hi = (index + 1) * len(flat) // count
+    out: List[Tuple[CrashPlan, List[CrashPoint]]] = []
+    for plan, point in flat[lo:hi]:
+        if out and out[-1][0] is plan:
+            out[-1][1].append(point)
+        else:
+            out.append((plan, [point]))
+    return out
+
+
 def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
                 cfg: Optional[NVMConfig], engine: str, mode: str,
-                progress=None
+                progress=None, shard: Optional[Tuple[int, int]] = None,
+                snapshot_budget_bytes: Optional[int] = None,
+                snapshot_policy: str = "spill"
                 ) -> Tuple[List[ScenarioResult], List[Dict[str, str]]]:
     """Run every cell of one (workload, strategy) pair. The unit of work
     both the serial loop and the multiprocess executor share — results
-    come back in plan-major, point-minor order either way."""
+    come back in plan-major, point-minor order either way.
+
+    ``shard=(i, k)`` evaluates only the i-th of k contiguous slices of
+    the pair's grounded crash points (plan grounding is deterministic,
+    so every shard derives the identical global cell order and its
+    slice independently); each shard regenerates its own golden prefix,
+    which the fork engine truncates at the shard's last crash point.
+    Only shard 0 reports the pair's skipped plans — they are per-pair
+    facts, not per-cell."""
     # late imports: both engines import this module (avoids the cycle)
     from .sweep_engine import run_pair_forked
 
@@ -736,15 +767,21 @@ def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
                             "strategy": strat.name,
                             "plan": plan.describe(),
                             "reason": str(exc)})
+    if shard is not None:
+        if shard[0] != 0:
+            skipped = []
+        grounded = _shard_grounded(grounded, shard)
     if not grounded:
         return [], skipped
+    tier_kw = dict(snapshot_budget_bytes=snapshot_budget_bytes,
+                   snapshot_policy=snapshot_policy)
     if engine == "fork":
         if mode == "batched":
             from .batched_engine import run_pair_batched
             return (run_pair_batched(probe, strat, grounded,
-                                     progress=progress), skipped)
+                                     progress=progress, **tier_kw), skipped)
         return (run_pair_forked(probe, strat, grounded, progress=progress,
-                                mode=mode), skipped)
+                                mode=mode, **tier_kw), skipped)
     results: List[ScenarioResult] = []
     reuse: Optional[Tuple[Workload, ConsistencyStrategy]] = (probe, strat)
     for plan, points in grounded:
@@ -766,9 +803,19 @@ def _sweep_pair(wl_spec, strat_spec, plans: Sequence[CrashPlan],
 
 
 def _run_pair_job(job) -> Tuple[List[ScenarioResult], List[Dict[str, str]]]:
-    """Top-level (picklable) worker entry for ``sweep(workers=N)``."""
-    wl_spec, strat_spec, plans, cfg, engine, mode = job
-    return _sweep_pair(wl_spec, strat_spec, plans, cfg, engine, mode)
+    """Top-level (picklable) worker entry for ``sweep(workers=N)``.
+
+    A job is the classic 6-tuple ``(wl_spec, strat_spec, plans, cfg,
+    engine, mode)`` — kept as-is so pair-shard journal fingerprints
+    stay stable — optionally extended by a 7th options dict carrying
+    ``shard`` (crash-point sharding) and the snapshot-tier knobs."""
+    wl_spec, strat_spec, plans, cfg, engine, mode = job[:6]
+    opts = job[6] if len(job) > 6 else {}
+    return _sweep_pair(wl_spec, strat_spec, plans, cfg, engine, mode,
+                       shard=opts.get("shard"),
+                       snapshot_budget_bytes=opts.get(
+                           "snapshot_budget_bytes"),
+                       snapshot_policy=opts.get("snapshot_policy", "spill"))
 
 
 def _check_parallelizable(workloads: Sequence, strategies: Sequence) -> None:
@@ -812,13 +859,15 @@ def _degrade_job(job, reason: str):
     measure leans on per-cell snapshots; full is the plain rerun-style
     execution path. All three agree on every deterministic field, so a
     degraded shard changes how cells are computed, never what they say.
+    Point-shard jobs degrade the same way — the trailing options dict
+    (shard slice, snapshot-tier knobs) is preserved verbatim.
     """
-    wl_spec, strat_spec, plans, cfg, engine, mode = job
+    wl_spec, strat_spec, plans, cfg, engine, mode = job[:6]
     step_down = {"batched": "measure", "measure": "full"}
     nxt = step_down.get(mode)
     if nxt is None:
         return None
-    return (wl_spec, strat_spec, plans, cfg, engine, nxt)
+    return (wl_spec, strat_spec, plans, cfg, engine, nxt) + tuple(job[6:])
 
 
 def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
@@ -835,7 +884,9 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
           shard_timeout: Optional[float] = None,
           shard_retries: int = 2,
           journal: Optional[str] = None,
-          chaos: Optional[Dict[int, str]] = None) -> List[ScenarioResult]:
+          chaos: Optional[Dict[int, str]] = None,
+          snapshot_budget_bytes: Optional[int] = None,
+          snapshot_policy: Optional[str] = None) -> List[ScenarioResult]:
     """Run the full workloads × strategies × crash-plans matrix.
 
     All plans of a (workload, strategy) pair are grounded against one
@@ -867,7 +918,25 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     per-emulator) and merges results in deterministic pair-major order,
     so the cell list is identical to ``workers=1`` regardless of
     completion order. Requires picklable registry specs. ``progress``
-    then fires per pair (in merge order) instead of per cell.
+    then fires per pair (in merge order) instead of per cell. When
+    ``workers`` exceeds the pair count, the spare workers split
+    individual pairs' crash points: each point-shard re-grounds the
+    pair's plans (grounding is deterministic), takes its contiguous
+    slice of the flattened cell list, and regenerates its own golden
+    prefix — the merged cell list stays identical to serial
+    cell-for-cell, and the journal/retry/chaos machinery covers
+    point-shards exactly as it covers pair-shards.
+
+    ``snapshot_budget_bytes`` (default ``REPRO_SNAPSHOT_BUDGET``) caps
+    each pair's resident fork-snapshot footprint; over budget the
+    least-recently-used snapshot payload is spilled to disk
+    (``snapshot_policy="spill"``, the default, env
+    ``REPRO_SNAPSHOT_POLICY``) or dropped and re-derived from the
+    golden prefix on its next access (``"recompute"``) — see
+    :class:`~repro.scenarios.sweep_engine.SnapshotTier`. Cells are
+    byte-identical either way; the tier stats ride every cell as
+    ``info["snapshot_tier"]``. The rerun engine takes no snapshots and
+    ignores the knobs.
 
     Sharded sweeps self-heal (:mod:`repro.scenarios.pool`): each shard
     gets a wall-clock deadline (``shard_timeout`` seconds, default from
@@ -902,6 +971,16 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
     if workers < 1:
         raise ValueError("workers must be >= 1")
     _validate_sweep_specs(workloads, strategies)
+    if snapshot_budget_bytes is None:
+        env_budget = os.environ.get("REPRO_SNAPSHOT_BUDGET", "").strip()
+        if env_budget:
+            snapshot_budget_bytes = int(env_budget)
+    if snapshot_policy is None:
+        snapshot_policy = os.environ.get("REPRO_SNAPSHOT_POLICY", "spill")
+    from .sweep_engine import SNAPSHOT_POLICIES
+    if snapshot_policy not in SNAPSHOT_POLICIES:
+        raise ValueError(f"unknown snapshot policy {snapshot_policy!r}; "
+                         f"choose from {SNAPSHOT_POLICIES}")
 
     pairs = [(wl_spec, strat_spec)
              for wl_spec in workloads for strat_spec in strategies]
@@ -912,7 +991,7 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
         # uniform contract: the spec requirement holds whenever sharding
         # was REQUESTED, even if a single-pair matrix ends up serial
         _check_parallelizable(workloads, strategies)
-    if workers > 1 and len(pairs) > 1:
+    if workers > 1:
         import multiprocessing as mp
 
         from .pool import run_sharded
@@ -928,8 +1007,30 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
         if shard_timeout is None:
             shard_timeout = float(
                 os.environ.get("REPRO_SWEEP_SHARD_TIMEOUT", "600"))
-        jobs = [(w, s, tuple(plans), cfg, engine, mode) for w, s in pairs]
-        # the merge is job-major (= pair-major) and deterministic no
+        # spare workers beyond the pair count split individual pairs'
+        # crash points into contiguous point-shards
+        shard_counts = [1] * len(pairs)
+        if workers > len(pairs):
+            base, extra = divmod(workers, len(pairs))
+            shard_counts = [base + (1 if i < extra else 0)
+                            for i in range(len(pairs))]
+        tier_opts: Dict[str, Any] = {}
+        if snapshot_budget_bytes is not None:
+            tier_opts = {"snapshot_budget_bytes": snapshot_budget_bytes,
+                         "snapshot_policy": snapshot_policy}
+        jobs: List[tuple] = []
+        for (w, s), k in zip(pairs, shard_counts):
+            # an unsharded, untiered pair keeps the classic 6-tuple so
+            # its journal fingerprint matches pre-point-sharding runs
+            base_job = (w, s, tuple(plans), cfg, engine, mode)
+            if k == 1:
+                jobs.append(base_job + ((dict(tier_opts),)
+                                        if tier_opts else ()))
+            else:
+                jobs.extend(base_job + (dict(tier_opts, shard=(i, k)),)
+                            for i in range(k))
+        # the merge is job-major (= pair-major, point-shard-minor, i.e.
+        # plan-major point-minor within each pair) and deterministic no
         # matter which worker finishes first or how often one is healed
         for pair_results, pair_skipped in run_sharded(
                 jobs, _run_pair_job, min(workers, len(jobs)),
@@ -945,7 +1046,9 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
         for wl_spec, strat_spec in pairs:
             pair_results, pair_skipped = _sweep_pair(
                 wl_spec, strat_spec, plans, cfg, engine, mode,
-                progress=progress)
+                progress=progress,
+                snapshot_budget_bytes=snapshot_budget_bytes,
+                snapshot_policy=snapshot_policy)
             results.extend(pair_results)
             skipped.extend(pair_skipped)
 

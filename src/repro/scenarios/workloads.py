@@ -552,20 +552,24 @@ class MMWorkload(Workload):
     def adcc_recover(self, crash_step):
         impl = self._impl
         nc = impl.nchunks
+        # re-executions run with replay=True: the persisted progress
+        # counter stays pinned at its crash-time value, so a nested crash
+        # anywhere inside recovery re-enters with the same scan range and
+        # the retry provably lands on the same state (idempotence).
         if crash_step < nc:
             bad, corrected, detect = impl._recover_loop1()
             for sb in bad:
-                impl._loop1_chunk(sb)
+                impl._loop1_chunk(sb, replay=True)
             lost, crashed_in = len(bad), "loop1"
         else:
             blocks_done = crash_step - nc + 1
             bad_chunks, corrected, d1 = impl._recover_loop1()
             for sb in bad_chunks:
-                impl._loop1_chunk(sb)
+                impl._loop1_chunk(sb, replay=True)
             bad_blocks, d2 = impl._recover_loop2(blocks_done)
             detect = d1 + d2
             for bb in bad_blocks:
-                impl._loop2_block(bb)
+                impl._loop2_block(bb, replay=True)
             lost, crashed_in = len(bad_blocks), "loop2"
         return RecoveryResult(
             resume_step=crash_step + 1, restart_point=crash_step,

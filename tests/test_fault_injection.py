@@ -211,21 +211,22 @@ class TestNestedRecovery:
         assert res.info["recovery_attempts"] == 2
         assert res.fault == NEST1.describe()
 
-    def test_mm_adcc_deep_nested_diverges(self):
-        """The figure's standing finding, pinned to its seeded cell:
-        ABFT-MM's ADCC recovery re-executes compute chunks and advances
-        its progress counter mid-recovery, so a deep re-crash strands
-        progress the data doesn't back — recovery is NOT re-entrant,
-        and the golden compare proves it (final answer wrong, too). If
-        this test starts failing because the class became idempotent,
-        the recovery was fixed: move the pin, update README + fig_faults
-        docs, and consider adding mm to the wholesale gate."""
+    def test_mm_adcc_deep_nested_is_idempotent(self):
+        """Retired standing finding, same seeded cell: ABFT-MM's ADCC
+        recovery used to advance its persisted progress counter while
+        re-executing chunks mid-recovery, so a deep re-crash stranded
+        progress the data didn't back (``recovery_diverged``). Recovery
+        now replays chunks with the counter pinned at its crash-time
+        value (``replay=True``), so the retried recovery provably lands
+        on the golden state — and fig_faults gates MM-adcc on zero
+        ``recovery_diverged`` alongside the wholesale mechanisms."""
         res = run_scenario(MM, "adcc",
                            CrashPlan.at_fraction(0.7, fault=NEST3),
                            cfg=SMALL)
-        assert res.correctness_class == "recovery_diverged"
-        assert res.correct is False
-        assert res.info["recovery_golden_match"] is False
+        assert res.correctness_class == "recovery_idempotent"
+        assert res.correct
+        assert res.info["recovery_golden_match"] is True
+        assert res.info["nested_crashes"] == 1
 
     def test_mm_adcc_shallow_nested_is_idempotent(self):
         res = run_scenario(MM, "adcc",
@@ -290,14 +291,19 @@ class TestPoisonDetection:
         assert res.correctness_class == "fault_detected"
         assert res.info["fault_words_injected"] == words
 
-    def test_undo_log_coverage_hole_is_silent(self):
-        """The class the campaign exists to surface: poison outside the
-        undo log's spans sails through rollback undetected and the
-        resumed run finalizes WRONG with no signal."""
+    def test_undo_log_coverage_hole_is_detected(self):
+        """Retired coverage hole, same seeded cell: this boundary crash
+        leaves no open transaction, so rollback never ran and poison on
+        committed spans used to sail through silently (the old pinned
+        ``fault_silent``). Commits now stamp a crc32 per committed span
+        and recovery validates the post-crash image against them, so the
+        poisoned word is flagged — detection, not repair: the resumed
+        run still finalizes wrong, but with a signal."""
         fp = FaultSpec(poison_words=2, seed=40)
         res = run_scenario(CG, "undo_log",
                            CrashPlan.at_fraction(0.5, fault=fp), cfg=SMALL)
-        assert res.correctness_class == "fault_silent"
+        assert res.correctness_class == "fault_detected"
+        assert res.info["payload_crc_mismatches"] > 0
         assert res.correct is False
         assert res.info["recovery_golden_match"] is False
 
