@@ -15,7 +15,12 @@ suite in benchmarks/run.py and benchmarks/sweep_timing.py): a dense
 one-crash-point-per-step matrix timed under rerun, fork, and
 fork+measure execution, plus the fig_torn dense torn matrix timed
 under measure vs batched, plus a dense torn KV serving matrix timed in
-measure mode (the ``kv_cells_per_second`` trend metric), plus a dense
+measure mode (the ``kv_cells_per_second`` trend metric) AND re-timed in
+batched mode against its analytic KV evaluators (the
+``kv_batched_speedup`` trend metric, gated >= 3x with zero per-cell
+fallbacks), plus a streaming-prefix emulator trace timed on the device
+backend vs the vectorized host (the ``device_prefix_speedup`` trend
+metric — the regime where the jit forward pass wins), plus a dense
 fault-injection matrix — nested re-crash and poisoned-line plans —
 timed in measure mode (the ``fault_cells_per_second`` trend metric),
 plus a single-pair dense matrix point-sharded across workers (the
@@ -34,6 +39,13 @@ as ``BENCH_batched.json``), with the hard gates CI relies on:
     determinism across jit compilation states);
   * kv measure vs fork — every field the timed KV measure cells emit
     equals the full-execution cell;
+  * kv batched vs measure — the analytic KV evaluators reproduce every
+    measure cell of the timed KV matrix exactly (and agree with their
+    own jit warm-up run), with ZERO cells falling back to per-cell
+    measure (``info["batched_fallback"]``) and the batched sweep at
+    least 3x faster than measure;
+  * device prefix — the device backend's streaming trace ends with the
+    byte-identical NVM image and traffic stats of the vectorized host;
   * fault measure vs fork — every field the timed fault-injection
     measure cells emit equals the full-execution cell;
   * point-sharded vs serial — splitting ONE pair's crash points across
@@ -47,9 +59,12 @@ as ``BENCH_batched.json``), with the hard gates CI relies on:
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Dict, List
+
+import numpy as np
 
 from repro.core.nvm import NVMConfig
 from repro.scenarios import (DEFAULT_SWEEP_PLANS, CrashPlan, FaultSpec,
@@ -365,6 +380,49 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
     kv_s = time.perf_counter() - t0
     kv_div = measure_divergences(kv_cells, sweep(engine="fork", **kv_kw))
 
+    # -- KV serving matrix, re-timed in batched mode ----------------------
+    # The same matrix through the analytic KV evaluators: restored-state
+    # strategies reduce to oracle-map arithmetic and ADCC replays its
+    # validation walk from the crash image via stacked checksum/value
+    # launches, so no cell should take the per-cell measure fallback.
+    # The warm run is the jit warm-up AND the determinism pin (same
+    # convention as the torn batched leg above); the speedup it buys is
+    # the tentpole number, so it is gated, not just recorded.
+    kv_warm = sweep(engine="fork", mode="batched", **kv_kw)
+    t0 = time.perf_counter()
+    kv_batched = sweep(engine="fork", mode="batched", **kv_kw)
+    kv_batched_s = time.perf_counter() - t0
+    kv_bdiv = full_divergences(kv_batched, kv_cells)
+    kv_bdiv += full_divergences(kv_batched, kv_warm)
+    kv_fallbacks = sum(1 for c in kv_batched
+                       if "batched_fallback" in c.info)
+
+    # -- device backend, streaming-prefix trace ---------------------------
+    # The regime the DeviceBackend exists for: long resident spans with
+    # the cache covering the working set, so every op clears
+    # MIN_DEVICE_ENTRIES and the whole forward pass stays on device (no
+    # host round-trip per op). Eviction-pressure traces — where device
+    # legitimately falls back to the vectorized host path — are covered
+    # by emu_bench; this leg records the win on the streaming shape and
+    # gates only correctness (byte-identical image + traffic stats),
+    # because the wall-clock ratio depends on whether jax actually has
+    # an accelerator under it.
+    from .emu_bench import REGION, run_backend
+    dp_elems = 262_144 if smoke else 2_000_000
+    dp_passes = 4 if smoke else 6
+    dp_cache = dp_elems * 8
+    dp_trace = [(op, 0, dp_elems) for _ in range(dp_passes)
+                for op in ("write", "read", "flush")]
+    vec_emu, dp_vec_s = run_backend("vectorized", dp_elems, dp_cache,
+                                    dp_trace, "lru")
+    run_backend("device", dp_elems, dp_cache, dp_trace, "lru")  # jit warm
+    dev_emu, dp_dev_s = run_backend("device", dp_elems, dp_cache,
+                                    dp_trace, "lru")
+    dp_images_equal = bool(np.array_equal(vec_emu.store.image[REGION],
+                                          dev_emu.store.image[REGION]))
+    dp_stats_equal = (dataclasses.asdict(vec_emu.stats)
+                      == dataclasses.asdict(dev_emu.stats))
+
     # -- fault-injection matrix, timed in measure mode --------------------
     # Fault cells bypass every fast path (batched evaluation, shared
     # golden state): each pays snapshot + golden recovery + restore +
@@ -418,7 +476,7 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         tier_stats[policy] = tc[0].info["snapshot_tier"]
 
     return {
-        "schema": "repro.scenarios.sweep_timing/v4",
+        "schema": "repro.scenarios.sweep_timing/v5",
         "smoke": bool(smoke),
         "matrix": {
             "workloads": [[w, p] for w, p in workloads],
@@ -434,6 +492,8 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
         "total_speedup": seconds["rerun"] / max(seconds["measure"], 1e-12),
         "batched_speedup": torn_measure_s / max(torn_batched_s, 1e-12),
         "kv_cells_per_second": len(kv_cells) / max(kv_s, 1e-12),
+        "kv_batched_speedup": kv_s / max(kv_batched_s, 1e-12),
+        "device_prefix_speedup": dp_vec_s / max(dp_dev_s, 1e-12),
         "fault_cells_per_second": len(fault_cells) / max(fault_s, 1e-12),
         "pointshard_speedup": ps_serial_s / max(ps_sharded_s, 1e-12),
         "pointshard": {
@@ -466,7 +526,21 @@ def engine_timing(smoke: bool = None, workers: int = None) -> Dict:
             "strategies": list(KV_TIMING_STRATEGIES),
             "cells": len(kv_cells),
             "measure_seconds": kv_s,
+            "batched_seconds": kv_batched_s,
             "divergences": kv_div,
+            "batched_divergences": kv_bdiv,
+            "batched_fallback_cells": kv_fallbacks,
+        },
+        "device_prefix": {
+            "matrix": "streaming full-region write/read/flush passes, "
+                      "cache covers the working set",
+            "elements": dp_elems,
+            "passes": dp_passes,
+            "cache_bytes": dp_cache,
+            "vectorized_seconds": dp_vec_s,
+            "device_seconds": dp_dev_s,
+            "images_equal": dp_images_equal,
+            "stats_equal": dp_stats_equal,
         },
         "batched": {
             "matrix": "fig_torn dense (crash step x survival fraction "
@@ -498,6 +572,8 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
     n_wdiv = len(payload["workers"]["divergences"])
     n_bdiv = len(payload["batched"]["divergences"])
     n_kdiv = len(payload["kv"]["divergences"])
+    n_kbdiv = len(payload["kv"]["batched_divergences"])
+    n_kfall = payload["kv"]["batched_fallback_cells"]
     n_fdiv = len(payload["fault"]["divergences"])
     n_pdiv = len(payload["pointshard"]["divergences"])
     n_tdiv = len(payload["snapshot_spill"]["divergences"])
@@ -528,6 +604,19 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
         Row("sweep/kv_cells_per_second", payload["kv_cells_per_second"],
             f"measure mode, {payload['kv']['cells']} cells "
             "(kv dense torn matrix)"),
+        Row("sweep/kv_batched_speedup", payload["kv_batched_speedup"],
+            "batched analytic KV evaluation over measure mode "
+            "(same matrix, jit-warm; floor: 3x)"),
+        Row("sweep/kv_batched_divergences", n_kbdiv,
+            "kv batched vs measure cell mismatches (must be 0)"),
+        Row("sweep/kv_batched_fallbacks", n_kfall,
+            "kv batched cells that fell back to per-cell measure "
+            "(must be 0)"),
+        Row("sweep/device_prefix_speedup",
+            payload["device_prefix_speedup"],
+            f"device backend over vectorized on the streaming prefix "
+            f"trace ({payload['device_prefix']['elements']} elements, "
+            f"images_equal={payload['device_prefix']['images_equal']})"),
         Row("sweep/divergences", n_div,
             "fork vs rerun deterministic payload mismatches (must be 0)"),
         Row("sweep/measure_divergences", n_mdiv,
@@ -591,6 +680,27 @@ def run_timing(smoke: bool = None, workers: int = None) -> List[Row]:
             f"kv measure-mode cells diverged from fork cells on "
             f"{n_kdiv} cells: {payload['kv']['divergences'][:3]} "
             f"(see {BENCH_SWEEP_JSON})")
+    if n_kbdiv:
+        raise AssertionError(
+            f"kv batched-mode cells diverged from measure-mode cells on "
+            f"{n_kbdiv} cells: {payload['kv']['batched_divergences'][:3]} "
+            f"(see {BENCH_SWEEP_JSON})")
+    if n_kfall:
+        raise AssertionError(
+            f"{n_kfall} kv batched cells fell back to per-cell measure "
+            f"evaluation — the analytic KV evaluators no longer cover "
+            f"the timed matrix (see {BENCH_SWEEP_JSON})")
+    if payload["kv_batched_speedup"] < 3.0:
+        raise AssertionError(
+            f"kv batched sweep achieved only "
+            f"{payload['kv_batched_speedup']:.2f}x over measure mode "
+            f"(floor: 3x, jit-warm; see {BENCH_SWEEP_JSON})")
+    dp = payload["device_prefix"]
+    if not (dp["images_equal"] and dp["stats_equal"]):
+        raise AssertionError(
+            f"device backend diverged from the vectorized host on the "
+            f"streaming prefix trace (images_equal={dp['images_equal']} "
+            f"stats_equal={dp['stats_equal']}; see {BENCH_SWEEP_JSON})")
     if n_fdiv:
         raise AssertionError(
             f"fault-injection measure-mode cells diverged from fork "

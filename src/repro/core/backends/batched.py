@@ -49,6 +49,8 @@ except Exception as exc:  # pragma: no cover - env without jax
 
 __all__ = ["have_jax", "jax_runtime_live", "cg_route",
            "cg_invariant_errors", "mm_chunk_stats",
+           "kv_row_checksums", "kv_value_match",
+           "cache_op_update", "queue_validity",
            "CHUNK_ELEMS", "GEMM_MAX_N", "SPARSE_BLOCK_ROWS"]
 
 # per-launch element budget: bounds device/host transfer buffers and
@@ -238,6 +240,233 @@ def cg_invariant_errors(P: np.ndarray, Q: np.ndarray, R: np.ndarray,
             orth[lo:hi] = np.asarray(o)[:hi - lo]
             rel[lo:hi] = np.asarray(r)[:hi - lo]
     return orth, rel
+
+
+# ---------------------------------------------------------------------------
+# KV integrity math (SplitMix64 mix-chain checksums, value-word verify)
+# ---------------------------------------------------------------------------
+#
+# Unlike the float CG/ABFT screens above, everything here is uint64
+# integer arithmetic with wraparound semantics — bit-exact on every XLA
+# backend and in the numpy fallback — so no certainty band is needed:
+# a device verdict IS the host verdict. The batched KV evaluator still
+# re-confirms device-flagged-bad rows with the exact host code
+# (repro.scenarios.kv), because those rare verdicts are the ones that
+# drive visible behavior (row drops, violation counts) and the
+# re-check costs nothing.
+
+_SM64_GAMMA = 0x9E3779B97F4A7C15
+_SM64_MIX1 = 0xBF58476D1CE4E5B9
+_SM64_MIX2 = 0x94D049BB133111EB
+_KV_MIX_INIT = 0x243F6A8885A308D3
+_KV_VALUE_SALT = 21  # key << 21 ^ seq, matching kv._value_words
+_MASK63 = (1 << 63) - 1
+
+
+def _np_splitmix(z: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 over uint64 arrays — bit-identical to the
+    scalar ``repro.scenarios.kv._splitmix`` (wraparound multiplies)."""
+    with np.errstate(over="ignore"):
+        z = z + np.uint64(_SM64_GAMMA)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(_SM64_MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(_SM64_MIX2)
+        return z ^ (z >> np.uint64(31))
+
+
+if jax is not None:
+
+    def _j_splitmix(z):
+        z = z + jnp.uint64(_SM64_GAMMA)
+        z = (z ^ (z >> jnp.uint64(30))) * jnp.uint64(_SM64_MIX1)
+        z = (z ^ (z >> jnp.uint64(27))) * jnp.uint64(_SM64_MIX2)
+        return z ^ (z >> jnp.uint64(31))
+
+    @functools.partial(jax.jit, static_argnames=("width",))
+    def _kv_row_ck_jit(words, *, width):
+        # order-sensitive chain: acc_{j+1} = splitmix(acc_j ^ w_j); the
+        # width is static (7 for index rows, 15 for meta rows) so the
+        # chain unrolls into a fixed op sequence per compiled shape
+        acc = jnp.full(words.shape[0], _KV_MIX_INIT, dtype=jnp.uint64)
+        for j in range(width):
+            acc = _j_splitmix(acc ^ words[:, j])
+        return acc & jnp.uint64(_MASK63)
+
+    @jax.jit
+    def _kv_value_match_jit(keys, seqs, got, nwords):
+        base = _j_splitmix((keys << jnp.uint64(_KV_VALUE_SALT)) ^ seqs)
+        offs = jnp.arange(got.shape[1], dtype=jnp.uint64)
+        expect = _j_splitmix(base[:, None] + offs[None, :]) \
+            & jnp.uint64(_MASK63)
+        live = offs[None, :] < nwords[:, None]
+        return jnp.all(jnp.where(live, got == expect, True), axis=1)
+
+    @functools.partial(jax.jit, static_argnames=("is_write", "fifo"))
+    def _cache_op_jit(present, dirty, stamp, t0, *, is_write, fifo):
+        # bulk no-eviction cache-op transition (see cache_op_update)
+        pos = jnp.arange(present.shape[0], dtype=jnp.int64)
+        miss = ~present
+        new_stamp = t0 + pos if not fifo else jnp.where(miss, t0 + pos, stamp)
+        new_dirty = (jnp.ones_like(dirty) if is_write
+                     else jnp.logical_and(dirty, present))
+        return (jnp.ones_like(present), new_dirty, new_stamp, miss,
+                jnp.sum(miss, dtype=jnp.int64))
+
+    @jax.jit
+    def _queue_validity_jit(present, stamp, entries, stamps, weight):
+        valid = jnp.logical_and(present[entries], stamp[entries] == stamps)
+        return valid, jnp.where(valid, weight, 0).astype(jnp.int64)
+
+
+def _pow2_rows(n: int) -> int:
+    c = 1
+    while c < n:
+        c <<= 1
+    return c
+
+
+def _as_u64(a: np.ndarray) -> np.ndarray:
+    # int64 -> uint64 by two's-complement reinterpretation (== & MASK64),
+    # matching the scalar host code's `w & _MASK64` on python ints
+    return np.ascontiguousarray(np.asarray(a)).astype(np.uint64)
+
+
+def kv_row_checksums(words: np.ndarray) -> np.ndarray:
+    """Batched order-sensitive 63-bit mix-chain checksum per row.
+
+    ``words`` is an (N, K) int64/uint64 stack of row prefixes (K = 7 for
+    KV index rows, 15 for meta rows). Returns the (N,) int64 checksums —
+    the device counterpart of ``repro.scenarios.kv._mix_words``, exact
+    (integer wraparound is bit-identical on device and host).
+    Falls back to vectorized numpy when jax is unavailable.
+    """
+    if len(words) == 0:
+        return np.empty(0, dtype=np.int64)
+    w = _as_u64(words).reshape(len(words), -1)
+    N, K = w.shape
+    if jax is None:
+        acc = np.full(N, _KV_MIX_INIT, dtype=np.uint64)
+        for j in range(K):
+            acc = _np_splitmix(acc ^ w[:, j])
+        return (acc & np.uint64(_MASK63)).astype(np.int64)
+    rows = _pow2_rows(max(1, N))
+    with enable_x64():
+        out = _kv_row_ck_jit(jnp.asarray(_pad_rows(w, rows)), width=K)
+        return np.asarray(out)[:N].astype(np.int64)
+
+
+def kv_value_match(keys: np.ndarray, seqs: np.ndarray, got: np.ndarray,
+                   nwords: np.ndarray) -> np.ndarray:
+    """Batched value-word verification for KV index rows.
+
+    Row i matches when ``got[i, :nwords[i]]`` equals the deterministic
+    value words of (key, seq) — the device counterpart of comparing
+    against ``repro.scenarios.kv._value_words``. ``got`` is (N, W)
+    zero-padded beyond each row's width; returns an (N,) bool array.
+    Exact (pure uint64 math); numpy fallback without jax.
+    """
+    if len(keys) == 0:
+        return np.empty(0, dtype=bool)
+    k = _as_u64(keys)
+    s = _as_u64(seqs)
+    g = _as_u64(got).reshape(len(k), -1)
+    nw = np.asarray(nwords, dtype=np.int64)
+    N, W = g.shape
+    if jax is None:
+        base = _np_splitmix((k << np.uint64(_KV_VALUE_SALT)) ^ s)
+        offs = np.arange(W, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            expect = _np_splitmix(base[:, None] + offs[None, :]) \
+                & np.uint64(_MASK63)
+        live = offs[None, :].astype(np.int64) < nw[:, None]
+        return np.all(np.where(live, g == expect, True), axis=1)
+    rows = _pow2_rows(max(1, N))
+    with enable_x64():
+        out = _kv_value_match_jit(
+            jnp.asarray(_pad_rows(k, rows)), jnp.asarray(_pad_rows(s, rows)),
+            jnp.asarray(_pad_rows(g, rows)),
+            jnp.asarray(_pad_rows(nw, rows)))
+        return np.asarray(out)[:N]
+
+
+# ---------------------------------------------------------------------------
+# DeviceBackend step kernels (forward-pass cache transitions)
+# ---------------------------------------------------------------------------
+
+def cache_op_update(present: np.ndarray, dirty: np.ndarray,
+                    stamp: np.ndarray, t0: int, is_write: bool, fifo: bool
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray, int]:
+    """Bulk cache-state transition for one span op touching entries
+    ``[e_lo, e_hi)`` when no eviction is needed (the streaming regime).
+
+    Inputs are the per-entry slices of a region's present/dirty bitmaps
+    and LRU stamps; ``t0`` is the op's base clock tick. Returns
+    ``(new_present, new_dirty, new_stamp, miss, n_miss)`` — exactly the
+    state `VectorizedBackend._op` produces for a no-eviction op:
+
+      * every touched entry ends resident;
+      * a write dirties all touched entries, a read preserves dirt on
+        hits and leaves misses clean;
+      * LRU restamps every entry with ``t0 + position``; FIFO restamps
+        misses only (hits keep their insertion stamp);
+      * ``n_miss`` misses were fetched (the caller charges read traffic
+        and queue-appends accordingly).
+
+    The caller must pre-check capacity and fall back to the host path
+    when the op could evict. Shapes are padded to powers of two
+    (pad lanes: present=True, dirty=False — hits that never miss) so
+    jit compiles log-many variants. Numpy fallback without jax.
+    """
+    m = len(present)
+    if jax is None:
+        pos = np.arange(m, dtype=np.int64)
+        miss = ~present
+        new_stamp = (t0 + pos if not fifo
+                     else np.where(miss, t0 + pos, stamp))
+        new_dirty = (np.ones(m, dtype=bool) if is_write
+                     else np.logical_and(dirty, present))
+        return (np.ones(m, dtype=bool), new_dirty, new_stamp, miss,
+                int(miss.sum()))
+    rows = _pow2_rows(max(1, m))
+    pad = rows - m
+    p = np.concatenate([present, np.ones(pad, dtype=bool)]) if pad else present
+    d = _pad_rows(np.ascontiguousarray(dirty), rows)
+    st = _pad_rows(np.ascontiguousarray(stamp), rows)
+    with enable_x64():
+        np_, nd, ns, miss, n_miss = _cache_op_jit(
+            jnp.asarray(p), jnp.asarray(d), jnp.asarray(st),
+            jnp.int64(t0), is_write=bool(is_write), fifo=bool(fifo))
+        return (np.asarray(np_)[:m], np.asarray(nd)[:m],
+                np.asarray(ns)[:m], np.asarray(miss)[:m], int(n_miss))
+
+
+def queue_validity(present: np.ndarray, stamp: np.ndarray,
+                   entries: np.ndarray, stamps: np.ndarray,
+                   weight: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Eviction-queue slot validation for a single-region window.
+
+    A queue slot is live when its entry is still resident and its
+    recorded stamp matches the entry's current stamp (stale LRU
+    re-touch duplicates fail the stamp check). Returns ``(valid, wts)``
+    with ``wts[i] = weight`` (the region's sector-line weight) on valid
+    slots and 0 elsewhere — the single-rid core of
+    ``VectorizedBackend._validity``. Pad lanes (entry 0 / stamp 0) are
+    never valid: a resident entry always carries a stamp >= 1.
+    Numpy fallback without jax.
+    """
+    n = len(entries)
+    if jax is None:
+        valid = np.logical_and(present[entries], stamp[entries] == stamps)
+        return valid, np.where(valid, weight, 0).astype(np.int64)
+    rows = _pow2_rows(max(1, n))
+    with enable_x64():
+        valid, wts = _queue_validity_jit(
+            jnp.asarray(np.ascontiguousarray(present)),
+            jnp.asarray(np.ascontiguousarray(stamp)),
+            jnp.asarray(_pad_rows(np.ascontiguousarray(entries), rows)),
+            jnp.asarray(_pad_rows(np.ascontiguousarray(stamps), rows)),
+            jnp.int64(weight))
+        return np.asarray(valid)[:n], np.asarray(wts)[:n]
 
 
 def mm_chunk_stats(V: np.ndarray, *, use_pallas: Optional[bool] = None,

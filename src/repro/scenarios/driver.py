@@ -996,14 +996,16 @@ def sweep(workloads: Sequence = ("cg", "mm", "xsbench"),
 
         from .pool import run_sharded
         start = "fork" if "fork" in mp.get_all_start_methods() else "spawn"
-        if mode == "batched":
-            from ..core.backends.batched import jax_runtime_live
-            # forking after this process has instantiated an XLA
-            # backend deadlocks the children's device math (inherited
-            # locks whose owner threads don't survive the fork), e.g.
-            # a serial batched sweep followed by a sharded one
-            if jax_runtime_live():
-                start = "spawn"
+        from ..core.backends.batched import jax_runtime_live
+        # forking after this process has instantiated an XLA backend
+        # deadlocks the children's device math (inherited locks whose
+        # owner threads don't survive the fork), e.g. a serial batched
+        # sweep followed by a sharded one. Checked for EVERY mode:
+        # batched children launch jit evaluators, and with
+        # REPRO_NVM_BACKEND=device even plain measure/full children run
+        # device math inside the emulator forward pass.
+        if jax_runtime_live():
+            start = "spawn"
         if shard_timeout is None:
             shard_timeout = float(
                 os.environ.get("REPRO_SWEEP_SHARD_TIMEOUT", "600"))

@@ -219,10 +219,14 @@ class Workload(abc.ABC):
         Must be deterministic in the recovered state and side-effect
         free on regions/traffic (read via uncharged ``.view``s): its
         ``rec.info`` entries are part of the engine-invariance contract.
-        The default is a no-op; workloads that override it are excluded
-        from the batched engine's analytic evaluators (which synthesize
-        RecoveryResults without running live recovery) and take the
-        per-cell measure fallback instead."""
+        The default is a no-op. The batched engine's analytic
+        evaluators synthesize RecoveryResults without running live
+        recovery, so a workload that overrides this needs a matching
+        evaluator that reproduces the audit from the request oracle or
+        the crash image (the KV family has one —
+        ``batched_engine._KVStateEvaluator`` / ``_KVAdccEvaluator``);
+        unknown auditing workloads take the per-cell measure fallback
+        instead (``info["batched_fallback"] = "audit-override:..."``)."""
 
     # -- ADCC hooks -------------------------------------------------------------
     def adcc_before_step(self, i: int) -> None:

@@ -12,8 +12,13 @@ whole regions. Deterministic seeds, no hypothesis dependency.
 The snapshot/restore tests extend the same randomized machinery to the
 fork protocol: a suffix trace replayed after ``restore()`` must land in
 a state bit-identical (traffic stats incl. modeled seconds, NVM images,
-dirty sets, truth) to a from-scratch replay of prefix+suffix — on both
+dirty sets, truth) to a from-scratch replay of prefix+suffix — on all
 backends, across repeated restores of the same snapshot.
+
+The ``device`` backend (jax-jit bulk transitions) is held to the same
+oracle: with ``MIN_DEVICE_ENTRIES`` forced to 1 every eviction-free
+span op takes the device kernels, and the traces' tiny caches keep the
+speculative-launch/host-fallback boundary under constant pressure.
 """
 
 import dataclasses
@@ -21,18 +26,28 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro.core.backends import LineSurvival, MediaFault
 from repro.core.nvm import CrashEmulator, NVMConfig
 
 
-def _make_pair(rng, replacement):
-    """Two emulators (reference, vectorized) with identical geometry and
-    identical randomized regions."""
+@pytest.fixture
+def device_hot(monkeypatch):
+    """Route every eviction-free span op through the device kernels
+    regardless of size (the padded jit path compiles to log-many
+    shapes, so this stays fast)."""
+    from repro.core.backends.device import DeviceBackend
+    monkeypatch.setattr(DeviceBackend, "MIN_DEVICE_ENTRIES", 1)
+
+
+def _make_pair(rng, replacement, kinds=("reference", "vectorized")):
+    """Two emulators of the given backend kinds with identical geometry
+    and identical randomized regions."""
     cache_lines = int(rng.integers(1, 10))
     line_bytes = int(rng.choice([32, 64]))
     cfg = dict(cache_bytes=cache_lines * line_bytes, line_bytes=line_bytes,
                replacement=replacement)
-    ref = CrashEmulator(NVMConfig(backend="reference", **cfg))
-    vec = CrashEmulator(NVMConfig(backend="vectorized", **cfg))
+    ref = CrashEmulator(NVMConfig(backend=kinds[0], **cfg))
+    vec = CrashEmulator(NVMConfig(backend=kinds[1], **cfg))
     regions = []
     for i in range(int(rng.integers(2, 5))):
         n = int(rng.integers(1, 600))
@@ -60,9 +75,10 @@ def _assert_same(ref: CrashEmulator, vec: CrashEmulator, regions, ctx: str):
             f"{ctx}: dirty set of {name!r} differs"
 
 
-def _run_trace(seed: int, replacement: str, n_ops: int = 120) -> None:
+def _run_trace(seed: int, replacement: str, n_ops: int = 120,
+               kinds=("reference", "vectorized")) -> None:
     rng = np.random.default_rng(seed)
-    ref, vec, regions = _make_pair(rng, replacement)
+    ref, vec, regions = _make_pair(rng, replacement, kinds)
     for step in range(n_ops):
         name, n, dtype, r_ref, r_vec = \
             regions[int(rng.integers(0, len(regions)))]
@@ -108,6 +124,75 @@ def _run_trace(seed: int, replacement: str, n_ops: int = 120) -> None:
 @pytest.mark.parametrize("seed", range(25))
 def test_randomized_trace_equivalence(seed, replacement):
     _run_trace(seed, replacement)
+
+
+@pytest.mark.parametrize("replacement", ["lru", "fifo"])
+@pytest.mark.parametrize("seed", range(12))
+def test_randomized_trace_device_equivalence(seed, replacement, device_hot):
+    """DeviceBackend vs VectorizedBackend on the same oracle traces:
+    every eviction-free op takes the jit kernels, every op under
+    pressure takes the host fallback, and the states must never
+    diverge at the boundary."""
+    _run_trace(seed, replacement, kinds=("vectorized", "device"))
+
+
+@pytest.mark.parametrize("granularity", ["line", "word"])
+@pytest.mark.parametrize("seed", range(6))
+def test_device_survival_crashes_equivalent(seed, granularity, device_hot):
+    """Torn (partial-survival) crashes at line and word granularity
+    leave vectorized and device backends byte-identical: survivor
+    selection reads the dirty queue and stamps the device path wrote."""
+    rng = np.random.default_rng(7000 + seed)
+    vec, dev, regions = _make_pair(rng, ("lru", "fifo")[seed % 2],
+                                   kinds=("vectorized", "device"))
+    for step in range(60):
+        name, n, dtype, r_vec, r_dev = \
+            regions[int(rng.integers(0, len(regions)))]
+        ctx = f"seed={seed} {granularity} step={step} region={name}"
+        op = rng.random()
+        if op < 0.6:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            val = rng.integers(0, 1000, size=hi - lo).astype(dtype)
+            r_vec[lo:hi] = val
+            r_dev[lo:hi] = val
+        elif op < 0.8:
+            lo = int(rng.integers(0, n))
+            hi = int(rng.integers(lo + 1, n + 1))
+            assert np.array_equal(r_vec[lo:hi], r_dev[lo:hi]), ctx
+        else:
+            survival = LineSurvival(
+                fraction=float(rng.choice([0.0, 0.25, 0.5, 0.75, 1.0])),
+                seed=int(rng.integers(0, 1 << 16)),
+                mode=str(rng.choice(["random", "eviction"])),
+                granularity=granularity)
+            lost_vec = vec.crash(survival)
+            lost_dev = dev.crash(survival)
+            assert lost_vec == lost_dev, (ctx, survival)
+            for nm, _, _, a, b in regions:
+                assert np.array_equal(a.view, b.view), f"{ctx}: {nm}"
+        _assert_same(vec, dev, regions, ctx)
+
+
+def test_device_media_fault_byte_identical(device_hot, monkeypatch):
+    """Same MediaFault spec, same corrupted post-crash bytes, whether
+    the forward pass ran on the vectorized host path or the device
+    kernels."""
+    views = {}
+    for backend in ("vectorized", "device"):
+        monkeypatch.setenv("REPRO_NVM_BACKEND", backend)
+        emu = CrashEmulator(NVMConfig(cache_bytes=256, line_bytes=64))
+        assert emu.backend.kind == backend
+        r = emu.alloc("x", (64,))
+        r[...] = np.arange(64.0)
+        r.flush()
+        emu.crash()
+        spans = emu.inject_media_fault(MediaFault(words=5, seed=3))
+        views[backend] = (spans, np.array(r.view))
+    vec_spans, vec_view = views["vectorized"]
+    dev_spans, dev_view = views["device"]
+    assert vec_spans == dev_spans
+    assert np.array_equal(vec_view, dev_view)
 
 
 # ---------------------------------------------------------------------------
@@ -190,9 +275,9 @@ def _state(emu, specs):
             emu.crashed)
 
 
-@pytest.mark.parametrize("backend", ["reference", "vectorized"])
+@pytest.mark.parametrize("backend", ["reference", "vectorized", "device"])
 @pytest.mark.parametrize("seed", range(10))
-def test_snapshot_restore_matches_scratch_replay(seed, backend):
+def test_snapshot_restore_matches_scratch_replay(seed, backend, device_hot):
     cfg, specs, ops = _make_trace(seed)
     cut = len(ops) // 2
     emu, regions = _build(backend, cfg, specs)
@@ -221,8 +306,8 @@ def test_snapshot_restore_matches_scratch_replay(seed, backend):
     assert _state(emu, specs) == mid_state
 
 
-@pytest.mark.parametrize("backend", ["reference", "vectorized"])
-def test_snapshot_capture_does_not_perturb_trace(backend):
+@pytest.mark.parametrize("backend", ["reference", "vectorized", "device"])
+def test_snapshot_capture_does_not_perturb_trace(backend, device_hot):
     """Interleaving snapshot() captures into a running trace must not
     change any observable state vs the same trace without captures."""
     cfg, specs, ops = _make_trace(3, n_ops=80)
@@ -246,14 +331,16 @@ def test_restore_into_wrong_emulator_raises():
         other.restore(snap)
 
 
+@pytest.mark.parametrize("other", ["vectorized", "device"])
 @pytest.mark.parametrize("replacement", ["lru", "fifo"])
-def test_streaming_cyclic_pressure(replacement):
+def test_streaming_cyclic_pressure(replacement, other, device_hot):
     """Cyclic full-range writes over a region 2x the cache: every op
     evicts not-yet-touched entries of its own range (the dynamic-miss
-    path), which is exactly where a batched implementation can diverge."""
+    path), which is exactly where a batched implementation can diverge
+    (and where the device backend must decline its speculative launch)."""
     cfg = dict(cache_bytes=4 * 64, line_bytes=64, replacement=replacement)
     ref = CrashEmulator(NVMConfig(backend="reference", **cfg))
-    vec = CrashEmulator(NVMConfig(backend="vectorized", **cfg))
+    vec = CrashEmulator(NVMConfig(backend=other, **cfg))
     n = 8 * 8  # 8 lines of float64
     r_ref = ref.alloc("x", (n,))
     r_vec = vec.alloc("x", (n,))
@@ -269,13 +356,14 @@ def test_streaming_cyclic_pressure(replacement):
     assert np.array_equal(r_ref.view, r_vec.view)
 
 
+@pytest.mark.parametrize("other", ["vectorized", "device"])
 @pytest.mark.parametrize("replacement", ["lru", "fifo"])
-def test_single_entry_larger_than_cache(replacement):
+def test_single_entry_larger_than_cache(replacement, other, device_hot):
     """A sector entry heavier than the whole cache: only the newest
     entry stays resident, everything else must be written back."""
     cfg = dict(cache_bytes=2 * 64, line_bytes=64, replacement=replacement)
     ref = CrashEmulator(NVMConfig(backend="reference", **cfg))
-    vec = CrashEmulator(NVMConfig(backend="vectorized", **cfg))
+    vec = CrashEmulator(NVMConfig(backend=other, **cfg))
     n = 8 * 16
     r_ref = ref.alloc("big", (n,), sector_lines=4)
     r_vec = vec.alloc("big", (n,), sector_lines=4)

@@ -28,10 +28,14 @@ from repro.core.backends.base import (
     word_spans,
 )
 from repro.core.backends.batched import (
+    cache_op_update,
     cg_invariant_errors,
     cg_route,
     have_jax,
+    kv_row_checksums,
+    kv_value_match,
     mm_chunk_stats,
+    queue_validity,
 )
 from repro.core.nvm import CrashEmulator, NVMConfig
 from repro.scenarios import (
@@ -116,6 +120,73 @@ class TestBatchedEqualsMeasure:
         (c,) = cells
         assert c.state_certified is None
         assert "state_certified" not in c.to_json_dict()
+
+
+class TestKVBatchedEqualsMeasure:
+    """The KV family's analytic evaluators (PR 10): state-restoring
+    strategies audited from the request oracle, adcc replayed from the
+    crash image with stacked SplitMix64 checksum launches. Every cell
+    must be byte-identical to measure mode AND actually take the
+    analytic route (zero ``batched_fallback`` markers)."""
+
+    PLANS = (
+        CrashPlan.no_crash(),
+        CrashPlan.at_every_step(torn=TornSpec(0.5, seed=4, samples=2)),
+        CrashPlan.at_every_step(
+            torn=TornSpec(0.5, seed=6, granularity="word")),
+        CrashPlan.at_fraction(0.6, torn=TornSpec(0.25, seed=3,
+                                                 mode="eviction")),
+    )
+    STRATS = ("none", "adcc", "shadow_snapshot", "undo_log",
+              "checkpoint_nvm@2")
+
+    @pytest.mark.parametrize("profile", ["etc", "udb"])
+    def test_kv_batched_equals_measure(self, profile):
+        wl = ("kv", {"profile": profile, "n_steps": 10, "seed": 11})
+        kw = dict(workloads=(wl,), strategies=self.STRATS,
+                  plans=self.PLANS, cfg=SMALL)
+        meas = sweep(engine="fork", mode="measure", **kw)
+        batch = sweep(engine="fork", mode="batched", **kw)
+        assert len(meas) == len(batch) > 0
+        for m, b in zip(meas, batch):
+            assert deterministic_cell_dict(b) == \
+                deterministic_cell_dict(m), _cell_key(m)
+            assert "batched_fallback" not in b.info, _cell_key(b)
+
+    def test_kv_blind_policy_batched_equals_measure(self):
+        # blind adcc adopts the rawest root and serves torn state: the
+        # image-side audit must reproduce the violation counts exactly
+        wl = ("kv", {"profile": "udb", "n_steps": 10, "seed": 11,
+                     "policy": "blind"})
+        kw = dict(workloads=(wl,), strategies=("adcc",),
+                  plans=(CrashPlan.at_every_step(
+                      torn=TornSpec(0.5, seed=9, samples=2)),), cfg=SMALL)
+        meas = sweep(engine="fork", mode="measure", **kw)
+        batch = sweep(engine="fork", mode="batched", **kw)
+        assert len(meas) == len(batch) > 0
+        # the torn matrix must exercise real violations or the audit
+        # replication is vacuous
+        assert any(c.info.get("durability_violations", 0) > 0
+                   or c.info.get("atomicity_violations", 0) > 0
+                   for c in meas)
+        for m, b in zip(meas, batch):
+            assert deterministic_cell_dict(b) == \
+                deterministic_cell_dict(m), _cell_key(m)
+            assert "batched_fallback" not in b.info, _cell_key(b)
+
+    def test_unsupported_strategy_cells_carry_fallback_reason(self):
+        from repro.scenarios.strategies import (CheckpointStrategy,
+                                                register_strategy)
+
+        class _OddCheckpoint(CheckpointStrategy):
+            pass
+
+        register_strategy("odd_ckpt_pr10", _OddCheckpoint, override=True)
+        cells = sweep(workloads=(CG,), strategies=("odd_ckpt_pr10",),
+                      plans=(CrashPlan.at_step(3),), cfg=SMALL,
+                      engine="fork", mode="batched")
+        (c,) = cells
+        assert c.info["batched_fallback"].startswith("unsupported")
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +415,70 @@ class TestBatchedDeviceMath:
                          use_pallas=True, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
                                    rtol=1e-4, atol=1e-4)
+
+    def test_kv_row_checksums_match_host_mixer(self):
+        from repro.scenarios.kv import _mix_words
+
+        rng = np.random.default_rng(6)
+        rows = rng.integers(-(1 << 40), 1 << 40, size=(37, 7),
+                            dtype=np.int64)
+        got = kv_row_checksums(rows)
+        want = np.array([_mix_words(r) for r in rows], dtype=np.int64)
+        np.testing.assert_array_equal(got, want)
+        assert kv_row_checksums(np.empty((0, 7), np.int64)).shape == (0,)
+
+    def test_kv_value_match_matches_host_values(self):
+        from repro.scenarios.kv import _value_words
+
+        rng = np.random.default_rng(7)
+        keys = rng.integers(0, 40, size=12).astype(np.int64)
+        seqs = rng.integers(1, 99, size=12).astype(np.int64)
+        nws = rng.integers(1, 9, size=12).astype(np.int64)
+        got = np.zeros((12, 8), np.int64)
+        for i in range(12):
+            got[i, :nws[i]] = _value_words(int(keys[i]), int(seqs[i]),
+                                           int(nws[i]))
+        got[3, 0] ^= 1                     # one corrupted word
+        ok = kv_value_match(keys, seqs, got, nws)
+        want = np.ones(12, bool)
+        want[3] = False
+        np.testing.assert_array_equal(ok, want)
+
+    @pytest.mark.parametrize("fifo", [False, True])
+    @pytest.mark.parametrize("is_write", [False, True])
+    def test_cache_op_update_matches_naive_transition(self, fifo, is_write):
+        rng = np.random.default_rng(8)
+        m = 23
+        present = rng.random(m) < 0.6
+        dirty = present & (rng.random(m) < 0.5)
+        stamp = rng.integers(1, 50, size=m).astype(np.int64)
+        t0 = 100
+        new_p, new_d, new_s, miss, n_miss = cache_op_update(
+            present.copy(), dirty.copy(), stamp.copy(), t0, is_write, fifo)
+        assert new_p.all()
+        np.testing.assert_array_equal(miss, ~present)
+        assert n_miss == int((~present).sum())
+        pos = np.arange(m, dtype=np.int64)
+        if fifo:                           # hits keep their stamp
+            np.testing.assert_array_equal(
+                new_s, np.where(~present, t0 + pos, stamp))
+        else:                              # LRU: every touch restamps
+            np.testing.assert_array_equal(new_s, t0 + pos)
+        want_d = np.ones(m, bool) if is_write else (dirty & present)
+        np.testing.assert_array_equal(new_d, want_d)
+
+    def test_queue_validity_matches_naive_scan(self):
+        rng = np.random.default_rng(9)
+        n = 40
+        present = rng.random(n) < 0.7
+        stamp = rng.integers(1, 30, size=n).astype(np.int64)
+        ents = rng.integers(0, n, size=17).astype(np.int64)
+        stamps = np.where(rng.random(17) < 0.5, stamp[ents],
+                          stamp[ents] - 1).astype(np.int64)
+        valid, wts = queue_validity(present, stamp, ents, stamps, 3)
+        want_valid = present[ents] & (stamp[ents] == stamps)
+        np.testing.assert_array_equal(valid, want_valid)
+        np.testing.assert_array_equal(wts, np.where(want_valid, 3, 0))
 
     def test_tile_sums_batch_pallas_interpret_matches_jnp(self):
         import jax.numpy as jnp

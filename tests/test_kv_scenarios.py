@@ -279,19 +279,19 @@ class TestDurabilityClasses:
 # ---------------------------------------------------------------------------
 
 class TestKVEngines:
-    def test_batched_mode_falls_back_and_matches_measure(self, caplog):
-        import logging
+    def test_batched_mode_is_analytic_and_matches_measure(self):
+        # KV used to be the fallback family (its audit override routed
+        # every batched cell through per-cell measure); the analytic KV
+        # evaluators retired that, so batched must now produce the same
+        # cells WITHOUT any cell taking the measure fallback.
         kw = dict(workloads=(KV,), strategies=("shadow_snapshot", "none"),
                   plans=(CrashPlan.no_crash(), TORN_EVERY))
         meas = sweep(mode="measure", **kw)
-        with caplog.at_level(logging.INFO,
-                             logger="repro.scenarios.batched_engine"):
-            bat = sweep(mode="batched", **kw)
-        assert "no analytic evaluator" in caplog.text
-        assert "fall back to per-cell measure" in caplog.text
+        bat = sweep(mode="batched", **kw)
         assert len(bat) == len(meas)
         for b, m in zip(bat, meas):
             assert deterministic_cell_dict(b) == deterministic_cell_dict(m)
+            assert "batched_fallback" not in b.info
 
     def test_certification_validate_clean_blind_dirty(self):
         kw = dict(plans=(TORN_EVERY,), mode="measure")
